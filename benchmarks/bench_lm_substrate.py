@@ -1,0 +1,46 @@
+"""LM-substrate microbenches (framework overhead visibility): one smoke
+train step and one decode step per block family, measured on CPU."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import registry
+from repro.models import lm as lm_mod
+from repro.models import transformer as T
+from repro.training.optimizer import OptConfig
+
+from benchmarks.common import emit, time_fn
+
+
+def run():
+    for arch in ("phi3-mini-3.8b", "olmoe-1b-7b", "recurrentgemma-2b",
+                 "rwkv6-7b"):
+        cfg = registry.smoke_config(arch)
+        key = jax.random.PRNGKey(0)
+        state = lm_mod.init_train_state(cfg, key, OptConfig())
+        step = jax.jit(lm_mod.make_train_step(cfg, OptConfig(), remat=False))
+        B, S = 4, 32
+        batch = {
+            "tokens": jax.random.randint(key, (B, S), 0, cfg.vocab),
+            "labels": jax.random.randint(key, (B, S), 0, cfg.vocab),
+            "mask": jnp.ones((B, S), jnp.float32),
+        }
+        if cfg.frontend:
+            batch["embeds"] = jax.random.normal(key, (B, S, cfg.d_model))
+            del batch["tokens"]
+        us = time_fn(step, state, batch, iters=3)
+        emit(f"lm_train_step_{arch}", us, f"B={B};S={S};smoke")
+
+        params = T.init_params(cfg, key)
+        cache = T.init_cache(cfg, B, 64, jnp.float32)
+        dec = jax.jit(lm_mod.make_decode_step(cfg))
+        tok = jnp.zeros((B,), jnp.int32) if not cfg.frontend \
+            else jnp.zeros((B, cfg.d_model), jnp.float32)
+        lens = jnp.full((B,), 5, jnp.int32)
+        us = time_fn(dec, params, cache, tok, lens, iters=3)
+        emit(f"lm_decode_step_{arch}", us, f"B={B};smoke")
+
+
+if __name__ == "__main__":
+    run()

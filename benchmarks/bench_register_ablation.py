@@ -1,0 +1,80 @@
+"""Paper Fig. 7 analogue: accumulator placement ablation.
+
+cuMF's biggest single win (2.5x on Netflix) is keeping A_u in the register
+file instead of round-tripping global memory per bin.  The TPU analogue is
+the VMEM-scratch accumulator vs an HBM round trip per k-tile.  On this CPU
+container we measure the two XLA execution strategies directly (single
+fused pass vs per-bin materialize+add) and report both the wall-clock ratio
+and the modeled HBM-write ratio (the structural quantity that carries to
+TPU: one A write per row vs one per bin)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ref as kref
+
+from benchmarks.common import emit, time_fn
+
+
+def _problem(m=2048, n=4096, K=256, f=64, seed=0):
+    rng = np.random.default_rng(seed)
+    theta = jnp.asarray(rng.standard_normal((n, f)), jnp.float32)
+    idx = jnp.asarray(rng.integers(0, n, (m, K)), jnp.int32)
+    cnt = jnp.asarray(rng.integers(K // 2, K + 1, (m,)), jnp.int32)
+    val = jnp.asarray(rng.standard_normal((m, K)), jnp.float32)
+    return theta, idx, val, cnt
+
+
+@jax.jit
+def fused_accum(theta, idx, val, cnt):
+    """Register/VMEM strategy: one pass, accumulator never leaves fast mem."""
+    g = jnp.take(theta, idx, axis=0)
+    mask = kref.mask_from_cnt(cnt, idx.shape[1], theta.dtype)
+    diag = jnp.where(cnt > 0, 0.05 * cnt.astype(jnp.float32), 1.0)
+    return kref.herm_ref(g, val, mask, diag)
+
+
+@jax.jit
+def binned_hbm_accum(theta, idx, val, cnt):
+    """No-register strategy: materialize+add A per bin (paper Fig. 7 'w/o')."""
+    m, K = idx.shape
+    f = theta.shape[1]
+    bins = 8
+    kb = K // bins
+    acc_a = jnp.zeros((m, f, f), jnp.float32)
+    acc_b = jnp.zeros((m, f), jnp.float32)
+    for b in range(bins):
+        sl = slice(b * kb, (b + 1) * kb)
+        g = jnp.take(theta, idx[:, sl], axis=0)
+        mask = (jnp.arange(b * kb, (b + 1) * kb)[None, :]
+                < cnt[:, None]).astype(theta.dtype)
+        gm = g * mask[..., None]
+        # optimization barrier forces the per-bin accumulator materialization
+        acc_a = jax.lax.optimization_barrier(
+            acc_a + jnp.einsum("ukf,ukg->ufg", gm, g))
+        acc_b = jax.lax.optimization_barrier(
+            acc_b + jnp.einsum("uk,ukf->uf", val[:, sl] * mask, g))
+    diag = jnp.where(cnt > 0, 0.05 * cnt.astype(jnp.float32), 1.0)
+    return acc_a + diag[:, None, None] * jnp.eye(f), acc_b
+
+
+def run():
+    args = _problem()
+    m, K = args[1].shape
+    f = args[0].shape[1]
+    us_fused = time_fn(fused_accum, *args)
+    us_binned = time_fn(binned_hbm_accum, *args)
+    bins = 8
+    # HBM writes of the accumulator: once per row tile vs once per bin
+    write_ratio = bins  # m*f^2*bins vs m*f^2
+    emit("fig7_register_fused", us_fused,
+         f"A_hbm_writes={m * f * f}")
+    emit("fig7_register_hbm_binned", us_binned,
+         f"A_hbm_writes={m * f * f * bins};slowdown={us_binned / us_fused:.2f}x;"
+         f"modeled_write_ratio={write_ratio}x")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,51 @@
+"""Paper Fig. 9/10: SU-ALS multi-device scaling.
+
+On this single-core container, virtual devices cannot show wall-clock
+speedup, so this bench reports (a) the measured single-device per-iteration
+time, and (b) the modeled multi-device scaling from the SU-ALS roofline
+terms (per-device flops and reduction bytes both shrink ~1/p — the paper's
+Fig. 9 close-to-linear claim; its small overhead is the reduce-scatter)."""
+from __future__ import annotations
+
+import jax
+
+from repro.core import als as als_mod
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+from repro.sparse import synth
+
+from benchmarks.common import emit, time_fn
+
+
+def run():
+    spec = synth.SynthSpec("scaling-mini", m=4096, n=512, nnz=400_000,
+                           f=32, lam=0.05)
+    r, rt, _, _ = synth.make_synthetic_ratings(spec, seed=1)
+    cfg = als_mod.AlsConfig(f=spec.f, lam=spec.lam, iters=1, mode="ref")
+    state = als_mod.als_init(r.m, rt.m, cfg)
+    rr, rtt = als_mod.ell_triplet(r), als_mod.ell_triplet(rt)
+
+    it = jax.jit(lambda s: als_mod.als_iteration(s, rr, rtt, cfg))
+    us1 = time_fn(it, state, iters=3)
+    emit("fig9_scaling_1dev_measured", us1, f"m={r.m};nnz={r.nnz};f={spec.f}")
+
+    # modeled p-device iteration time at paper scale (Netflix, f=100->128)
+    s = synth.DATASETS["netflix"]
+    f = 128
+    flops = 2 * s.nnz * f * f * 2          # both half-iterations, A only
+    herm_bytes = 2 * (s.nnz * f * 4 + (s.m + s.n) * f * f * 4)
+    t1 = None
+    for p in (1, 2, 4, 8, 16):
+        comp = flops / p / PEAK_FLOPS_BF16
+        mem = herm_bytes / p / HBM_BW
+        red = 2 * (s.m + s.n) / p * f * f * 4 * (p - 1) / p / ICI_BW
+        t = max(comp, mem) + red
+        if t1 is None:
+            t1 = t * 1.0
+        eff = t1 / (t * p)        # parallel efficiency vs 1 device
+        emit(f"fig9_scaling_modeled_p{p}", t * 1e6,
+             f"eff={eff:.2f};comp_s={comp:.4f};mem_s={mem:.4f};"
+             f"reduce_s={red:.4f}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,453 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+"""Roofline analysis (assignment §Roofline).
+
+Methodology (documented in EXPERIMENTS.md):
+- XLA's ``cost_analysis`` counts while/scan bodies ONCE regardless of trip
+  count (verified empirically), so the full-program compile is used only as
+  the memory-fits proof.  The roofline terms come from **unit compiles**:
+  one scanned block per kind, the loss/logits head, and the optimizer
+  update, each lowered at its true per-device shard shapes, multiplied by
+  known trip counts (layers x microbatches).
+- ``cost_analysis()`` numbers are PER DEVICE on a partitioned module
+  (verified: a (4,4)-sharded matmul reports global/16), so terms divide by
+  per-chip peaks directly.
+- collective bytes are parsed per unit from the partitioned HLO text
+  (operand shapes are already per-device) and scaled by the same
+  multiplicities.
+
+Terms (per training/serving step, seconds):
+  compute    = HLO_flops_per_device / 197e12 (bf16 peak)
+  memory     = HLO_bytes_per_device / 819e9
+  collective = collective_bytes_per_device / 50e9 (ICI per-link)
+"""
+
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import registry
+from repro.configs.base import SHAPES, ModelConfig, ShapeConfig
+from repro.launch import builders
+from repro.launch.dryrun import parse_collectives
+from repro.launch.mesh import (HBM_BW, ICI_BW, PEAK_FLOPS_BF16,
+                               make_production_mesh)
+
+ARTIFACT_DIR = os.path.join(os.path.dirname(__file__), "..",
+                            "experiments", "roofline")
+
+
+# ---------------------------------------------------------------------------
+# analytic MODEL_FLOPS (global, per step)
+# ---------------------------------------------------------------------------
+
+def model_flops(cfg: ModelConfig, shape: ShapeConfig) -> float:
+    """6*N*D-convention flops (causal-aware attention), true (unpadded)
+    architecture — the 'useful work' numerator of the HLO ratio."""
+    from repro.models.transformer import layer_pattern
+    B, S = shape.batch, shape.seq
+    if shape.kind == "decode":
+        tokens = B
+    else:
+        tokens = B * S
+    n_mat = cfg.active_params_count() - cfg.vocab * cfg.d_model * (
+        1 if cfg.tie_embeddings else 0)   # head matmul counts once
+    fwd = 2.0 * n_mat * tokens
+
+    for kind in layer_pattern(cfg):
+        if kind == "attn":
+            w = cfg.sliding_window
+            if shape.kind == "decode":
+                ctx = min(w, S) if w else S
+                fwd += 4.0 * B * cfg.n_heads * cfg.d_head * ctx
+            else:
+                ctx = (min(w, S) if w else S / 2.0)
+                fwd += 4.0 * B * S * cfg.n_heads * cfg.d_head * ctx
+        elif kind == "rwkv":
+            fwd += 3.0 * tokens * cfg.d_model * 64    # WKV state update
+        elif kind == "rglru":
+            fwd += 8.0 * tokens * (cfg.d_rnn or cfg.d_model)
+    if shape.kind == "train":
+        return 3.0 * fwd
+    return fwd
+
+
+def analytic_bytes(spec, shape: ShapeConfig, mb: int, n_chips: int) -> float:
+    """First-order per-device HBM traffic per step (TPU-fusion estimate).
+
+    XLA-CPU ``bytes accessed`` counts every unfused elementwise op, which a
+    TPU backend would fuse into the surrounding matmuls, so it overstates
+    HBM traffic ~3-6x.  This model counts the streams that must touch HBM:
+    parameter reads (per microbatch, fwd+bwd), optimizer state sweeps,
+    residual/activation traffic, KV/cache reads, and the logits tensor.
+    Coefficients documented in EXPERIMENTS.md §Roofline.
+    """
+    from repro.models.transformer import layer_pattern
+    cfg = spec.model
+    B, S = shape.batch, shape.seq
+    P = cfg.params_count()
+    L = cfg.n_layers
+    d = cfg.d_model
+
+    if shape.kind == "train":
+        toks_dev = B * S / n_chips
+        toks_mb_dev = toks_dev / mb
+        param_stream = 2 * mb * (P * 2) * 2 / n_chips * n_chips  # gathered:
+        # each device materializes the full bf16 params per microbatch
+        # (fwd + bwd) under FSDP — the all-gather writes them to local HBM
+        # and the matmuls read them back:
+        param_stream = 2 * 2 * mb * (P * 2)
+        opt_bytes = 12 if spec.opt == "adamw" else 4.5
+        opt_stream = 2 * opt_bytes * P / n_chips + 2 * 4 * P / n_chips
+        act_stream = 2.5 * 12 * toks_dev * d * 2 * L
+        attn_stream = 0.0
+        for kind in layer_pattern(cfg):
+            if kind == "attn":
+                ctx = min(cfg.sliding_window or S, S)
+                # KV re-read per q-chunk (chunk 512) over fwd+bwd+remat
+                attn_stream += 2.5 * (toks_dev / 512) * ctx * \
+                    cfg.n_kv * cfg.d_head * 2 * 2
+        logit_stream = 3 * 2.5 * toks_dev * cfg.vocab / 16 * 2
+        return (param_stream + opt_stream + act_stream + attn_stream
+                + logit_stream)
+
+    if shape.kind == "prefill":
+        toks_dev = B * S / n_chips
+        param_stream = P * 2 / 16          # TP-sharded weights, read once
+        act_stream = 8 * toks_dev * d * 2 * L
+        attn_stream = 0.0
+        for kind in layer_pattern(cfg):
+            if kind == "attn":
+                ctx = min(cfg.sliding_window or S, S)
+                attn_stream += (toks_dev / 512) * ctx * cfg.n_kv \
+                    * cfg.d_head * 2 * 2
+        return param_stream + act_stream + attn_stream
+
+    # decode: weight + cache streams dominate
+    from repro.models import transformer as T
+    cache = jax.eval_shape(lambda: T.init_cache(cfg, B, S, jnp.bfloat16))
+    cache_bytes = sum(l.size * l.dtype.itemsize
+                      for l in jax.tree.leaves(cache))
+    param_stream = P * 2 / 16
+    return param_stream + cache_bytes / n_chips + 10 * B * d * 2 * L / n_chips
+
+
+# ---------------------------------------------------------------------------
+# units
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class Unit:
+    name: str
+    fn: object
+    args: tuple
+    mult: float
+
+
+def _x_struct(mesh, dp, b, s, d, dtype=jnp.bfloat16):
+    return jax.ShapeDtypeStruct((b, s, d), dtype,
+                                sharding=NamedSharding(mesh, P(dp, None, None)))
+
+
+def _single_layer_structs(cfg, kind, policy, mesh, dtype):
+    from repro.models import transformer as T
+    shapes = T._BLOCK_SHAPES[kind](cfg)
+
+    def mk(leaf):
+        shp, axes = leaf
+        return jax.ShapeDtypeStruct(
+            shp, dtype, sharding=NamedSharding(mesh, policy.spec(axes)))
+    return {k: mk(v) for k, v in shapes.items()}
+
+
+def _kind_counts(cfg):
+    from repro.models.transformer import layer_pattern
+    counts = {}
+    for k in layer_pattern(cfg):
+        counts[k] = counts.get(k, 0) + 1
+    return counts
+
+
+def train_units(spec, shape, mesh, opts) -> list[Unit]:
+    from repro.models import transformer as T
+    from repro.models.lm import _xent
+    from repro.training import optimizer as opt_mod
+
+    cfg = spec.model
+    dpn = builders.dp_size(mesh) * (mesh.shape["model"] if opts.tp1 else 1)
+    mb = max(1, min(opts.microbatch or spec.microbatch, shape.batch // dpn))
+    b_mb = shape.batch // mb
+    dp = builders._dp_spec(mesh, b_mb, tp1=opts.tp1)
+    policy = builders._train_policy(spec, mesh, tp1=opts.tp1)
+    units = []
+    positions = jnp.arange(shape.seq)[None]
+
+    for kind, count in _kind_counts(cfg).items():
+        lp = _single_layer_structs(cfg, kind, policy, mesh, jnp.float32)
+        x = _x_struct(mesh, dp, b_mb, shape.seq, cfg.d_model)
+
+        def layer_loss(p, xx, kind=kind):
+            pos = jnp.broadcast_to(jnp.arange(xx.shape[1])[None],
+                                   (xx.shape[0], xx.shape[1]))
+            pc = jax.tree.map(lambda a: a.astype(jnp.bfloat16)
+                              if a.dtype == jnp.float32 else a, p)
+            y, _ = T._BLOCK_FWD[kind](
+                cfg, pc, xx, pos, None, mode="train", mesh=mesh,
+                lengths=None, serve_seq_shard=False,
+                causal_skip=opts.causal_skip,
+                chunk_q=opts.chunk_q, chunk_kv=opts.chunk_kv)
+            return jnp.sum(y.astype(jnp.float32))
+
+        units.append(Unit(
+            name=f"layer_{kind}_train",
+            fn=jax.value_and_grad(layer_loss, argnums=(0, 1)),
+            args=(lp, x), mult=count * mb))
+
+    # loss head (logits + xent + bwd)
+    emb = jax.ShapeDtypeStruct(
+        (cfg.padded_vocab, cfg.d_model), jnp.float32,
+        sharding=NamedSharding(mesh, policy.spec(("vocab", "embed_d"))))
+    hid = _x_struct(mesh, dp, b_mb, shape.seq, cfg.d_model)
+    lbl = jax.ShapeDtypeStruct((b_mb, shape.seq), jnp.int32,
+                               sharding=NamedSharding(mesh, P(dp, None)))
+
+    from repro.distributed.sharding import vocab_axis
+
+    def head_loss(e, h, l):
+        logits = jnp.einsum("bsd,vd->bsv", h, e.astype(h.dtype))
+        logits = jax.lax.with_sharding_constraint(
+            logits, NamedSharding(mesh, P(dp, None, vocab_axis(dp))))
+        return jnp.mean(_xent(logits, l))
+
+    units.append(Unit("loss_head_train",
+                      jax.value_and_grad(head_loss, argnums=(0, 1)),
+                      (emb, hid, lbl), mult=mb))
+
+    # optimizer update over the full stacked params
+    state = builders.train_state_structs(spec, mesh)
+    _, opt_update = opt_mod.make_optimizer(opt_mod.OptConfig(name=spec.opt))
+
+    def opt_step(grads, opt_state, params):
+        return opt_update(grads, opt_state, params)
+
+    units.append(Unit("optimizer", opt_step,
+                      (state.params, state.opt, state.params), mult=1.0))
+    return units
+
+
+def fwd_units(spec, shape, mesh, opts) -> list[Unit]:
+    """prefill: per-kind forward blocks + last-token logits."""
+    from repro.models import transformer as T
+    cfg = spec.model
+    dp = builders._dp_spec(mesh, shape.batch)
+    policy = builders._serve_policy(spec, mesh)
+    units = []
+    for kind, count in _kind_counts(cfg).items():
+        lp = _single_layer_structs(cfg, kind, policy, mesh, jnp.bfloat16)
+        x = _x_struct(mesh, dp, shape.batch, shape.seq, cfg.d_model)
+
+        def layer_fwd(p, xx, kind=kind):
+            pos = jnp.broadcast_to(jnp.arange(xx.shape[1])[None],
+                                   (xx.shape[0], xx.shape[1]))
+            y, _ = T._BLOCK_FWD[kind](
+                cfg, p, xx, pos, None, mode="train", mesh=mesh,
+                lengths=None, serve_seq_shard=False,
+                causal_skip=opts.causal_skip,
+                chunk_q=opts.chunk_q, chunk_kv=opts.chunk_kv)
+            return y
+        units.append(Unit(f"layer_{kind}_fwd", layer_fwd, (lp, x),
+                          mult=count))
+
+    emb = jax.ShapeDtypeStruct(
+        (cfg.padded_vocab, cfg.d_model), jnp.bfloat16,
+        sharding=NamedSharding(mesh, policy.spec(("vocab", "embed_d"))))
+    hid = _x_struct(mesh, dp, shape.batch, 1, cfg.d_model)
+    units.append(Unit(
+        "logits_last",
+        lambda e, h: jnp.einsum("bsd,vd->bsv", h, e), (emb, hid), mult=1.0))
+    return units
+
+
+def decode_units(spec, shape, mesh, opts) -> list[Unit]:
+    from repro.models import transformer as T
+    cfg = spec.model
+    dp = builders._dp_spec(mesh, shape.batch)
+    policy = builders._serve_policy(spec, mesh)
+    units = []
+    lengths = jax.ShapeDtypeStruct((shape.batch,), jnp.int32,
+                                   sharding=NamedSharding(mesh, P(dp)))
+    for kind, count in _kind_counts(cfg).items():
+        lp = _single_layer_structs(cfg, kind, policy, mesh, jnp.bfloat16)
+        x = _x_struct(mesh, dp, shape.batch, 1, cfg.d_model)
+        cache_one = jax.eval_shape(
+            lambda: T._block_cache_shape(cfg, kind, shape.batch, shape.seq,
+                                         jnp.bfloat16))
+
+        def shard_cache(path, leaf):
+            name = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
+            if name in ("k", "v"):
+                seq = "model" if spec.serve_seq_shard else None
+                kv = ("model" if (not spec.serve_seq_shard
+                                  and cfg.padded_kv % mesh.shape["model"] == 0
+                                  and not cfg.sliding_window) else None)
+                sp = P(dp, seq, kv, None)
+            elif name == "pos":
+                sp = P(dp, None)
+            elif name == "s":
+                sp = P(dp, "model", None, None)
+            else:
+                sp = P(*([dp] + [None] * (leaf.ndim - 1)))
+            return jax.ShapeDtypeStruct(leaf.shape, leaf.dtype,
+                                        sharding=NamedSharding(mesh, sp))
+        cache = jax.tree_util.tree_map_with_path(shard_cache, cache_one)
+
+        def layer_dec(p, c, xx, ln, kind=kind):
+            pos = ln[:, None]
+            y, nc = T._BLOCK_FWD[kind](
+                cfg, p, xx, pos, c, mode="decode", mesh=mesh, lengths=ln,
+                serve_seq_shard=spec.serve_seq_shard,
+                causal_skip=False, chunk_q=512, chunk_kv=512)
+            return y, nc
+        units.append(Unit(f"layer_{kind}_decode", layer_dec,
+                          (lp, cache, x, lengths), mult=count))
+
+    emb = jax.ShapeDtypeStruct(
+        (cfg.padded_vocab, cfg.d_model), jnp.bfloat16,
+        sharding=NamedSharding(mesh, policy.spec(("vocab", "embed_d"))))
+    hid = _x_struct(mesh, dp, shape.batch, 1, cfg.d_model)
+    units.append(Unit(
+        "logits_decode",
+        lambda e, h: jnp.argmax(jnp.einsum("bsd,vd->bsv", h, e), -1),
+        (emb, hid), mult=1.0))
+    return units
+
+
+# ---------------------------------------------------------------------------
+# driver
+# ---------------------------------------------------------------------------
+
+def roofline_cell(arch_id: str, shape_name: str,
+                  opts: builders.CellOpts = builders.CellOpts(),
+                  save: bool = True) -> dict:
+    mesh = make_production_mesh(multi_pod=False)
+    spec = registry.get_arch(arch_id)
+    shape = SHAPES[shape_name]
+    if spec.skip_reason(shape):
+        return {"arch": arch_id, "shape": shape_name, "status": "skip",
+                "reason": spec.skip_reason(shape)}
+
+    if shape.kind == "train":
+        units = train_units(spec, shape, mesh, opts)
+    elif shape.kind == "prefill":
+        units = fwd_units(spec, shape, mesh, opts)
+    else:
+        units = decode_units(spec, shape, mesh, opts)
+
+    flops = bytes_ = coll = 0.0
+    per_unit = []
+    with mesh:
+        for u in units:
+            lowered = jax.jit(u.fn).lower(*u.args)
+            compiled = lowered.compile()
+            ca = compiled.cost_analysis()
+            cc = parse_collectives(compiled.as_text())
+            f = ca.get("flops", 0.0) * u.mult
+            b = ca.get("bytes accessed", 0.0) * u.mult
+            c = cc["total_bytes"] * u.mult
+            flops += f
+            bytes_ += b
+            coll += c
+            per_unit.append({"unit": u.name, "mult": u.mult,
+                             "flops": f, "bytes": b, "coll_bytes": c,
+                             "collectives": cc["count"]})
+
+    n_chips = mesh.devices.size
+    mf = model_flops(spec.model, shape)
+    mb = max(1, min(opts.microbatch or spec.microbatch,
+                    shape.batch // builders.dp_size(mesh))) \
+        if shape.kind == "train" else 1
+    abytes = analytic_bytes(spec, shape, mb, n_chips)
+    terms = {
+        "compute_s": flops / PEAK_FLOPS_BF16,
+        "memory_s": abytes / HBM_BW,
+        "collective_s": coll / ICI_BW,
+    }
+    dominant = max(terms, key=terms.get)
+    bound_time = max(terms.values())
+    step_time_lb = bound_time  # roofline lower bound on step time
+    rec = {
+        "arch": arch_id, "shape": shape_name, "status": "ok",
+        "chips": n_chips,
+        "hlo_flops_per_device": flops,
+        "hlo_bytes_per_device": bytes_,
+        "analytic_bytes_per_device": abytes,
+        "memory_s_hlo_unfused": bytes_ / HBM_BW,
+        "collective_bytes_per_device": coll,
+        "model_flops_global": mf,
+        "useful_ratio": mf / max(flops * n_chips, 1.0),
+        "terms_s": terms,
+        "dominant": dominant,
+        "roofline_step_s": step_time_lb,
+        "mfu_upper_bound": mf / (n_chips * PEAK_FLOPS_BF16 * step_time_lb)
+        if step_time_lb else 0.0,
+        "units": per_unit,
+    }
+    if save:
+        os.makedirs(ARTIFACT_DIR, exist_ok=True)
+        suffix = "_opt" if (opts.causal_skip or opts.fused_loss
+                            or opts.tp1) else ""
+        with open(os.path.join(
+                ARTIFACT_DIR, f"{arch_id}_{shape_name}{suffix}.json"),
+                "w") as fh:
+            json.dump(rec, fh, indent=1)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--causal-skip", action="store_true")
+    ap.add_argument("--fused-loss", action="store_true")
+    ap.add_argument("--tp1", action="store_true")
+    ap.add_argument("--resume", action="store_true")
+    args = ap.parse_args()
+
+    opts = builders.CellOpts(causal_skip=args.causal_skip,
+                             fused_loss=args.fused_loss, tp1=args.tp1)
+    cells = ([(args.arch, args.shape)] if args.arch
+             else [(a, s) for a in registry.list_archs() for s in SHAPES])
+    for arch_id, shape_name in cells:
+        suffix = "_opt" if (opts.causal_skip or opts.fused_loss
+                            or opts.tp1) else ""
+        path = os.path.join(ARTIFACT_DIR, f"{arch_id}_{shape_name}{suffix}.json")
+        if args.resume and os.path.exists(path):
+            print(f"[roofline] {arch_id} {shape_name}: cached", flush=True)
+            continue
+        t0 = time.time()
+        try:
+            rec = roofline_cell(arch_id, shape_name, opts)
+            if rec["status"] == "ok":
+                t = rec["terms_s"]
+                print(f"[roofline] {arch_id} {shape_name}: "
+                      f"comp={t['compute_s']:.4f}s mem={t['memory_s']:.4f}s "
+                      f"coll={t['collective_s']:.4f}s dom={rec['dominant']} "
+                      f"useful={rec['useful_ratio']:.2f} "
+                      f"({time.time()-t0:.0f}s)", flush=True)
+            else:
+                print(f"[roofline] {arch_id} {shape_name}: skip", flush=True)
+        except Exception:
+            print(f"[roofline] {arch_id} {shape_name}: ERROR", flush=True)
+            traceback.print_exc()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,31 @@
+"""Benchmark entry point: one function per paper table/figure.
+Prints ``name,us_per_call,derived`` CSV lines."""
+from __future__ import annotations
+
+import sys
+
+
+def main() -> None:
+    from benchmarks import (bench_convergence, bench_register_ablation,
+                            bench_texture, bench_scaling, bench_huge,
+                            bench_kernels, bench_reduction,
+                            bench_lm_substrate)
+    print("name,us_per_call,derived")
+    mods = [
+        bench_convergence,       # Fig. 6
+        bench_register_ablation, # Fig. 7
+        bench_texture,           # Fig. 8
+        bench_scaling,           # Fig. 9/10
+        bench_huge,              # Fig. 11 + Table 1
+        bench_reduction,         # Fig. 5
+        bench_kernels,           # kernel-level (beyond-paper fusion)
+        bench_lm_substrate,      # LM substrate overhead
+    ]
+    if "--quick" in sys.argv:
+        mods = mods[:2]
+    for m in mods:
+        m.run()
+
+
+if __name__ == '__main__':
+    main()

@@ -1,0 +1,33 @@
+"""Quickstart: factorize a synthetic Netflix-like rating matrix with ALS.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+~30 seconds on CPU.  Prints test RMSE per iteration (paper Fig. 6 protocol);
+with the planted noise sigma=0.1 the oracle floor is ~0.1.
+"""
+import sys
+
+from repro.core import als as als_mod
+from repro.sparse import synth
+
+
+def main():
+    spec = synth.SynthSpec("netflix-quickstart", m=2048, n=512,
+                           nnz=150_000, f=16, lam=0.05)
+    print(f"synthesizing {spec.nnz} ratings ({spec.m}x{spec.n}, f={spec.f})")
+    r, rt, rte, _ = synth.make_synthetic_ratings(spec, seed=0, noise=0.1)
+    print(f"padded-ELL: K={r.K}, fill={r.fill:.2f}x")
+
+    cfg = als_mod.AlsConfig(f=spec.f, lam=spec.lam, iters=8, mode="ref")
+    _, hist = als_mod.als_train(
+        als_mod.ell_triplet(r), als_mod.ell_triplet(rt), r.m, rt.m, cfg,
+        test=als_mod.ell_triplet(rte),
+        callback=lambda st, rec: print(
+            f"iter {rec['iteration']:2d}  train_rmse={rec['train_rmse']:.4f}"
+            f"  test_rmse={rec['test_rmse']:.4f}"))
+    assert hist[-1]["test_rmse"] < 0.3, "did not converge"
+    print("converged.")
+
+
+if __name__ == "__main__":
+    main()

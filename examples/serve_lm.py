@@ -1,0 +1,56 @@
+"""Serve a small model with batched requests through the continuous-
+batching engine (slot admission, ragged lengths, KV cache reuse).
+
+    PYTHONPATH=src python examples/serve_lm.py --arch phi3-mini-3.8b
+"""
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import registry
+from repro.models import transformer as T
+from repro.serving.engine import Request, ServeEngine
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="phi3-mini-3.8b",
+                    choices=registry.list_archs())
+    ap.add_argument("--requests", type=int, default=6)
+    ap.add_argument("--slots", type=int, default=3)
+    ap.add_argument("--new-tokens", type=int, default=12)
+    args = ap.parse_args()
+
+    cfg = registry.smoke_config(args.arch)
+    if cfg.frontend:
+        raise SystemExit("stub-frontend archs serve embeddings; pick a "
+                         "token arch for this demo")
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    eng = ServeEngine(cfg, params, n_slots=args.slots, max_seq=96)
+
+    rng = np.random.default_rng(0)
+    reqs = []
+    for i in range(args.requests):
+        prompt = rng.integers(0, cfg.vocab, size=rng.integers(3, 9))
+        req = Request(rid=i, prompt=prompt.astype(np.int32),
+                      max_new_tokens=args.new_tokens)
+        reqs.append(req)
+        eng.submit(req)
+        print(f"req {i}: prompt={prompt.tolist()}")
+
+    t0 = time.time()
+    steps = 0
+    while eng.step():
+        steps += 1
+    dt = time.time() - t0
+    total = sum(len(r.out) for r in reqs)
+    for r in reqs:
+        print(f"req {r.rid}: generated={r.out}")
+    print(f"{total} tokens in {dt:.2f}s over {steps} engine steps "
+          f"({total/dt:.1f} tok/s, {args.slots} slots)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,90 @@
+"""Train a small LM on the synthetic n-gram stream with the full substrate:
+any of the 10 archs (reduced config), AdamW, grad accumulation,
+checkpoint/restart.
+
+    PYTHONPATH=src python examples/train_lm.py --arch qwen3-4b --steps 60
+    PYTHONPATH=src python examples/train_lm.py --arch rwkv6-7b --steps 40
+
+Loss drops well below the unigram entropy once the linear n-gram rule is
+learned.  ``--width`` scales the model up (e.g. --width 512 --layers 8
+gives a ~110M-param model for a longer run).
+"""
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import CheckpointManager
+from repro.configs import registry
+from repro.data.prefetch import Prefetcher
+from repro.data.tokens import synthetic_lm_batches
+from repro.models import lm as lm_mod
+from repro.training.optimizer import OptConfig
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-4b",
+                    choices=registry.list_archs())
+    ap.add_argument("--steps", type=int, default=60)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--width", type=int, default=0)
+    ap.add_argument("--layers", type=int, default=0)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--microbatch", type=int, default=2)
+    ap.add_argument("--ckpt", default="")
+    args = ap.parse_args()
+
+    cfg = registry.smoke_config(args.arch)
+    if args.width:
+        cfg = dataclasses.replace(
+            cfg, d_model=args.width, d_ff=args.width * 3,
+            d_head=args.width // max(cfg.n_heads, 1),
+            d_rnn=args.width if cfg.d_rnn else None)
+    if args.layers:
+        cfg = dataclasses.replace(cfg, n_layers=args.layers)
+    n_params = cfg.params_count()
+    print(f"arch={args.arch} params={n_params/1e6:.1f}M vocab={cfg.vocab}")
+
+    opt = OptConfig(lr=args.lr)
+    state = lm_mod.init_train_state(cfg, jax.random.PRNGKey(0), opt)
+    step = jax.jit(lm_mod.make_train_step(
+        cfg, opt, microbatch=args.microbatch, remat=False))
+
+    start = 0
+    mgr = None
+    if args.ckpt:
+        mgr = CheckpointManager(args.ckpt, keep=2)
+        restored, start = mgr.restore_or_init(state, lambda: state)
+        if start:
+            state = jax.tree.map(jnp.asarray, restored)
+            print(f"resumed from step {start}")
+
+    stream = Prefetcher(
+        synthetic_lm_batches(cfg.vocab, args.seq, args.batch, seed=0),
+        depth=2)
+    t0 = time.time()
+    for i, batch in zip(range(start, args.steps), stream):
+        if cfg.frontend:   # stub-frontend archs consume embeddings
+            key = jax.random.fold_in(jax.random.PRNGKey(9), i)
+            batch = dict(batch)
+            batch["embeds"] = jax.random.normal(
+                key, (args.batch, args.seq, cfg.d_model), jnp.float32)
+            batch.pop("tokens")
+        state, m = step(state, batch)
+        if (i + 1) % 10 == 0 or i == start:
+            print(f"step {i+1:4d}  loss={float(m['loss']):.4f}  "
+                  f"gnorm={float(m['grad_norm']):.2f}  "
+                  f"({(time.time()-t0)/(i-start+1):.2f}s/step)", flush=True)
+        if mgr and (i + 1) % 25 == 0:
+            mgr.save(i + 1, state)
+    if mgr:
+        mgr.wait()
+    print("done.")
+
+
+if __name__ == "__main__":
+    main()

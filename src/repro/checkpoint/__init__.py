@@ -1,0 +1,7 @@
+"""Sharded, fault-tolerant checkpointing (paper §4.4 'Fault tolerance')."""
+
+from repro.checkpoint.store import save_checkpoint, restore_checkpoint, latest_step
+from repro.checkpoint.manager import CheckpointManager
+
+__all__ = ["save_checkpoint", "restore_checkpoint", "latest_step",
+           "CheckpointManager"]

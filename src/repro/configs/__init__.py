@@ -1,0 +1,7 @@
+"""Architecture configs (the 10 assigned archs + the paper's own ALS runs)."""
+
+from repro.configs.base import ModelConfig, ShapeConfig, ArchSpec, SHAPES
+from repro.configs.registry import get_arch, list_archs, smoke_config
+
+__all__ = ["ModelConfig", "ShapeConfig", "ArchSpec", "SHAPES",
+           "get_arch", "list_archs", "smoke_config"]

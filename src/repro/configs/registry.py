@@ -1,0 +1,115 @@
+"""Architecture registry: ``--arch <id>`` resolution + input_specs()."""
+from __future__ import annotations
+
+import importlib
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchSpec, ModelConfig, ShapeConfig, SHAPES
+
+_ARCH_MODULES = {
+    "musicgen-medium": "repro.configs.musicgen_medium",
+    "qwen1.5-4b": "repro.configs.qwen1_5_4b",
+    "phi3-mini-3.8b": "repro.configs.phi3_mini_3_8b",
+    "mistral-large-123b": "repro.configs.mistral_large_123b",
+    "qwen3-4b": "repro.configs.qwen3_4b",
+    "olmoe-1b-7b": "repro.configs.olmoe_1b_7b",
+    "moonshot-v1-16b-a3b": "repro.configs.moonshot_v1_16b_a3b",
+    "recurrentgemma-2b": "repro.configs.recurrentgemma_2b",
+    "rwkv6-7b": "repro.configs.rwkv6_7b",
+    "internvl2-26b": "repro.configs.internvl2_26b",
+}
+
+
+def list_archs() -> list[str]:
+    return list(_ARCH_MODULES)
+
+
+def get_arch(arch_id: str) -> ArchSpec:
+    mod = importlib.import_module(_ARCH_MODULES[arch_id])
+    return mod.ARCH
+
+
+def smoke_config(arch_id: str) -> ModelConfig:
+    mod = importlib.import_module(_ARCH_MODULES[arch_id])
+    return mod.SMOKE
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig, *, mesh=None,
+                dp_spec=None, model_axis="model", seq_shard_cache=False):
+    """ShapeDtypeStruct stand-ins for every model input of a (arch x shape)
+    cell — weak-type-correct, shardable, no allocation.
+
+    train:   {tokens|embeds, labels, mask}
+    prefill: {tokens|embeds}
+    decode:  (tokens|embeds [B], lengths [B]) + cache built separately.
+    """
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    def sds(shp, dtype, spec=None):
+        if mesh is not None and spec is not None:
+            return jax.ShapeDtypeStruct(shp, dtype,
+                                        sharding=NamedSharding(mesh, spec))
+        return jax.ShapeDtypeStruct(shp, dtype)
+
+    B, S = shape.batch, shape.seq
+    dp = dp_spec
+    stub = cfg.frontend in ("audio_stub", "vision_stub")
+
+    if shape.kind in ("train", "prefill"):
+        if stub:
+            batch = {"embeds": sds((B, S, cfg.d_model), jnp.bfloat16,
+                                   P(dp, None, None))}
+        else:
+            batch = {"tokens": sds((B, S), jnp.int32, P(dp, None))}
+        if shape.kind == "train":
+            batch["labels"] = sds((B, S), jnp.int32, P(dp, None))
+            batch["mask"] = sds((B, S), jnp.float32, P(dp, None))
+        return batch
+
+    # decode: one new token + fill state
+    tok = (sds((B, cfg.d_model), jnp.bfloat16, P(dp, None)) if stub
+           else sds((B,), jnp.int32, P(dp)))
+    lengths = sds((B,), jnp.int32, P(dp))
+    return {"tokens_or_embeds": tok, "lengths": lengths}
+
+
+def cache_specs(cfg: ModelConfig, shape: ShapeConfig, *, mesh=None,
+                dp_spec=None, seq_shard_cache=False, dtype=jnp.bfloat16,
+                stacked: bool = False):
+    """ShapeDtypeStruct tree for the decode cache of a cell.
+
+    Default layout is per-layer (unstacked) — required at scale so the
+    donated cache buffers alias in place (see transformer.init_cache)."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.models import transformer as T
+
+    cache = jax.eval_shape(
+        lambda: T.init_cache(cfg, shape.batch, shape.seq, dtype,
+                             stacked=stacked))
+
+    if mesh is None:
+        return cache
+
+    def shard(path, leaf):
+        name = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
+        lead = [None] if stacked else []     # layer-stack dim when stacked
+        if name in ("k", "v"):
+            seq = "model" if seq_shard_cache else None
+            kv = None
+            if not seq_shard_cache and cfg.padded_kv % mesh.shape["model"] == 0 \
+               and not cfg.sliding_window:
+                kv = "model"
+            spec = P(*(lead + [dp_spec, seq, kv, None]))
+        elif name == "pos":
+            spec = P(*(lead + [dp_spec, None]))
+        elif name == "s":
+            spec = P(*(lead + [dp_spec, "model", None, None]))
+        else:
+            spec = P(*(lead + [dp_spec] + [None] * (leaf.ndim - len(lead) - 1)))
+        return jax.ShapeDtypeStruct(leaf.shape, leaf.dtype,
+                                    sharding=NamedSharding(mesh, spec))
+
+    return jax.tree_util.tree_map_with_path(shard, cache)

@@ -1,0 +1,15 @@
+"""cuMF core: ALS matrix factorization (the paper's contribution) in JAX.
+
+- als.py       : single-device MO-ALS iteration + full training driver.
+- objective.py : cost J (weighted-lambda), train/test RMSE.
+- partition.py : the eq. (8) partition planner (choose p, q from HBM budget).
+"""
+
+from repro.core.als import AlsConfig, AlsState, als_init, als_iteration, als_train
+from repro.core.objective import rmse_padded, objective_j
+from repro.core.partition import PartitionPlan, plan_partitions
+
+__all__ = [
+    "AlsConfig", "AlsState", "als_init", "als_iteration", "als_train",
+    "rmse_padded", "objective_j", "PartitionPlan", "plan_partitions",
+]

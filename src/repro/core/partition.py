@@ -1,0 +1,91 @@
+"""Partition planner — paper eq. (8), generalized to a TPU mesh.
+
+cuMF chooses p (Theta column shards == data parallelism) and q (X row
+batches == model parallelism) so that a single device holds::
+
+    m f / q  +  n f / p  +  |R^(ij)|  +  (m/q) f^2  +  (m/q) f  +  eps  <  C
+
+with the best practices of §4.3:
+  1. if p = 1 fits, stay on one device (SU-ALS degenerates to MO-ALS),
+  2. stop growing q once p = 1 fits,
+  3. otherwise start from p with n f / p ~ C/2 and pick the smallest q.
+
+On a mesh, p maps to the "model" axis (and "pod" x "model" when multi-pod)
+and q to the "data" axis; q larger than the data axis runs in waves
+(elasticity, §4.4) — `waves` reports how many.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+GiB = 1 << 30
+
+
+@dataclasses.dataclass(frozen=True)
+class PartitionPlan:
+    p: int                  # column shards of Theta (data parallelism)
+    q: int                  # row shards/batches of X (model parallelism)
+    bytes_per_device: int
+    terms: dict
+    fits: bool
+    waves: int = 1          # q-batches executed per device wave (elasticity)
+
+    def describe(self) -> str:
+        t = ", ".join(f"{k}={v / GiB:.3f}GiB" for k, v in self.terms.items())
+        return (f"p={self.p} q={self.q} waves={self.waves} "
+                f"total={self.bytes_per_device / GiB:.3f}GiB fits={self.fits} [{t}]")
+
+
+def _bytes_per_device(m, n, nnz, f, p, q, fill=1.5, dtype_bytes=4, eps=512 << 20):
+    terms = {
+        "X_batch": m * f * dtype_bytes // q,
+        "Theta_shard": n * f * dtype_bytes // p,
+        "R_shard": int(2 * nnz * dtype_bytes * fill) // (p * q),  # idx+val, padded
+        "A_batch": m * f * f * dtype_bytes // q,
+        "B_batch": m * f * dtype_bytes // q,
+        "eps": eps,
+    }
+    return sum(terms.values()), terms
+
+
+def plan_partitions(
+    m: int, n: int, nnz: int, f: int,
+    hbm_bytes: int = 16 * GiB,
+    n_model: int = 16,          # devices on the "model" axis (p candidates)
+    n_data: int = 16,           # devices on the "data" axis (q waves base)
+    fill: float = 1.5,
+    dtype_bytes: int = 4,
+    eps: int = 512 << 20,
+) -> PartitionPlan:
+    """Choose (p, q) per paper §4.3 for the given problem and mesh."""
+    # Best practice 1/2: smallest q with p=1, if Theta fits a device.
+    def fits(p, q):
+        total, terms = _bytes_per_device(m, n, nnz, f, p, q, fill, dtype_bytes, eps)
+        return total < hbm_bytes, total, terms
+
+    if n * f * dtype_bytes + eps < hbm_bytes // 2:
+        p = 1
+        q = 1
+        while True:
+            ok, total, terms = fits(p, q)
+            if ok:
+                waves = -(-q // n_data)
+                return PartitionPlan(p, q, total, terms, True, waves)
+            q *= 2
+            if q > 1 << 24:
+                break
+
+    # Best practice 3: p so that Theta shard ~ C/2, then smallest q.
+    p = 1
+    while n * f * dtype_bytes / p > hbm_bytes / 2 and p < n_model:
+        p *= 2
+    p = min(p, n_model)
+    q = 1
+    while q <= 1 << 24:
+        ok, total, terms = fits(p, q)
+        if ok:
+            waves = -(-q // n_data)
+            return PartitionPlan(p, q, total, terms, True, waves)
+        q *= 2
+    total, terms = _bytes_per_device(m, n, nnz, f, p, q, fill, dtype_bytes, eps)
+    return PartitionPlan(p, q, total, terms, False, -(-q // n_data))

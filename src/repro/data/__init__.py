@@ -1,0 +1,6 @@
+"""Data pipelines: LM token batches + rating-matrix streaming with prefetch."""
+
+from repro.data.tokens import TokenDataset, synthetic_lm_batches
+from repro.data.prefetch import Prefetcher
+
+__all__ = ["TokenDataset", "synthetic_lm_batches", "Prefetcher"]

@@ -1,0 +1,47 @@
+"""Host->device prefetch: the paper's out-of-core streaming, JAX-style.
+
+cuMF (§4.4 'Out-of-core computation') plans partitions ahead of time, then
+uses CPU threads + CUDA streams to preload the next q-batch while the
+current one computes, hiding load time "except for the first load".  The
+JAX equivalent: a background thread calls ``jax.device_put`` (async on TPU)
+``depth`` batches ahead; dispatching the next step's computation overlaps
+its transfer with the current step's compute.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Callable, Iterator, Optional
+
+import jax
+
+
+class Prefetcher:
+    def __init__(self, it: Iterator, *, depth: int = 2,
+                 put: Optional[Callable] = None):
+        self._it = it
+        self._put = put or (lambda x: jax.tree.map(jax.device_put, x))
+        self._q: queue.Queue = queue.Queue(maxsize=depth)
+        self._done = object()
+        self._thread = threading.Thread(target=self._worker, daemon=True)
+        self._thread.start()
+
+    def _worker(self):
+        try:
+            for item in self._it:
+                self._q.put(self._put(item))   # device_put is async: the
+        except BaseException as e:             # transfer runs while compute
+            self._q.put(e)                     # proceeds on earlier batches
+            return
+        self._q.put(self._done)
+
+    def __iter__(self):
+        return self
+
+    def __next__(self):
+        item = self._q.get()
+        if item is self._done:
+            raise StopIteration
+        if isinstance(item, BaseException):
+            raise item
+        return item

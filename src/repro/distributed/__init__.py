@@ -1,0 +1,24 @@
+"""Distribution layer: meshes, collective schedules, SU-ALS, LM sharding.
+
+- collectives.py : one-phase (flat) and two-phase (topology-aware) parallel
+                   reduction — paper §4.2 mapped to reduce-scatter on ICI/DCI.
+- su_als.py      : SU-ALS (paper Alg. 3) under shard_map.
+- sharding.py    : PartitionSpec policies for the LM stack (DP/FSDP/TP/SP/EP).
+- flash_decode.py: sequence-sharded decode attention (partial-softmax psum).
+"""
+
+from repro.distributed.collectives import (
+    reduce_scatter_flat,
+    hierarchical_reduce_scatter,
+    collective_bytes_reduce,
+)
+from repro.distributed.su_als import su_als_update, make_su_als_fns, shard_ratings
+
+__all__ = [
+    "reduce_scatter_flat",
+    "hierarchical_reduce_scatter",
+    "collective_bytes_reduce",
+    "su_als_update",
+    "make_su_als_fns",
+    "shard_ratings",
+]

@@ -1,0 +1,149 @@
+"""Flash-decode: single-token attention over a sequence-sharded KV cache.
+
+For long-context decode (32k-524k) of large models the KV cache cannot live
+on one device; we shard it on the *sequence* dimension over the "model"
+axis.  Plain attention would force GSPMD to all-gather the cache (hundreds
+of GB); instead each shard computes a partial softmax over its local slice
+and the partials are combined with three tiny collectives (max, sum-of-
+weights, weighted value sum) — the flash-decoding scheme, expressed under
+``shard_map`` with the batch axes left in auto mode.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+NEG_INF = -1e30
+
+
+def _partial_decode(q, k_loc, v_loc, lengths, s_offset, *, window=None):
+    """Partial-softmax stats for the local KV slice.
+
+    q [B, H, dh]; k_loc/v_loc [B, S_loc, KV, dh]; lengths [B];
+    s_offset: global position of local slice start.
+    Returns (m [B,KV,G], l [B,KV,G], o [B,KV,G,dh])."""
+    b, h, dh = q.shape
+    kv = k_loc.shape[2]
+    qg = q.reshape(b, kv, h // kv, dh)
+    # NOTE: dots run at the cache dtype (bf16) without a preferred f32
+    # output — XLA-CPU otherwise materializes an f32-converted COPY of the
+    # whole cache slice per layer (the TPU MXU accumulates bf16 dots in
+    # f32 internally, so the target loses nothing).  Softmax stats in f32.
+    sc = jnp.einsum("bkgd,btkd->bkgt", qg.astype(k_loc.dtype),
+                    k_loc).astype(jnp.float32) * (dh ** -0.5)
+    pos = s_offset + jnp.arange(k_loc.shape[1])
+    msk = pos[None, :] < lengths[:, None]
+    if window is not None:
+        msk &= pos[None, :] >= (lengths[:, None] - window)
+    msk = msk[:, None, None, :]
+    sc = jnp.where(msk, sc, NEG_INF)
+    m = sc.max(axis=-1)
+    p = jnp.where(msk, jnp.exp(sc - m[..., None]), 0.0)
+    l = p.sum(axis=-1)
+    o = jnp.einsum("bkgt,btkd->bkgd", p.astype(v_loc.dtype),
+                   v_loc).astype(jnp.float32)
+    return m, l, o
+
+
+def flash_decode(q, k_cache, v_cache, lengths, *, mesh, axis="model",
+                 window=None):
+    """q [B,H,dh] (replicated over ``axis``); caches [B,S,KV,dh] sharded on
+    dim 1 over ``axis``; lengths [B].  Returns [B,H,dh]."""
+    b, h, dh = q.shape
+
+    # shard offset via sharded iota (not lax.axis_index -> PartitionId,
+    # which the XLA SPMD partitioner rejects in large unrolled programs)
+    pos_iota = jnp.arange(k_cache.shape[1], dtype=jnp.int32)
+
+    def local(qq, kc, vc, ln, pos_loc):
+        m_i, l_i, o_i = _partial_decode(qq, kc, vc, ln, pos_loc[0],
+                                        window=window)
+        m = lax.pmax(m_i, axis)
+        alpha = jnp.exp(m_i - m)
+        l = lax.psum(l_i * alpha, axis)
+        o = lax.psum(o_i * alpha[..., None], axis)
+        out = o / jnp.maximum(l, 1e-30)[..., None]
+        return out.reshape(b, h, dh).astype(qq.dtype)
+
+    return jax.shard_map(
+        local, mesh=mesh,
+        in_specs=(P(), P(None, axis), P(None, axis), P(), P(axis)),
+        out_specs=P(),
+        axis_names={axis},
+        check_vma=False,
+    )(q, k_cache, v_cache, lengths, pos_iota)
+
+
+def flash_decode_update(q, k_cache, v_cache, k_new, v_new, lengths, *,
+                        mesh, dp=None, seq_axis="model", kv_axis=None,
+                        window=None):
+    """Fused cache write + decode attention in ONE shard_map region.
+
+    Every shard_map boundary materializes its cache operands once per
+    layer under XLA-CPU buffer assignment; with three regions per layer
+    (write-k, write-v, attend) the 32k decode cells leaked ~20 GiB of
+    temp.  Fusing them means the k/v caches cross a boundary exactly once
+    and the in->out buffers alias.
+
+    Returns (out [B, H, dh], kc_new, vc_new).  Layouts as in cache_write:
+    seq_axis xor kv_axis sharded over "model", batch over ``dp``.
+    """
+    b, h, dh = q.shape
+    pos_iota = jnp.arange(k_cache.shape[1], dtype=jnp.int32)
+    manual = set()
+    if dp:
+        manual |= set(dp if isinstance(dp, tuple) else (dp,))
+    if seq_axis:
+        manual.add(seq_axis)
+    if kv_axis:
+        manual.add(kv_axis)
+    if not manual:
+        manual = {"model"}
+
+    cache_spec = P(dp, seq_axis, kv_axis, None)
+    new_spec = P(dp, kv_axis, None)
+    q_spec = P(dp, kv_axis, None) if kv_axis else P(dp)
+
+    def write_rows(buf, new, pos_c, ok):
+        """Per-row dynamic_update_slice chain.  A batched scatter here gets
+        upcast to f32 by the XLA SPMD partitioner (bf16-scatter workaround)
+        which materializes full f32 cache copies per layer; DUS is
+        bf16-native and aliases in place."""
+        kvd, dhd = buf.shape[2], buf.shape[3]
+        for i in range(buf.shape[0]):
+            cur = lax.dynamic_slice(buf, (i, pos_c[i], 0, 0),
+                                    (1, 1, kvd, dhd))
+            row = jnp.where(ok[i], new[i].astype(buf.dtype)[None, None],
+                            cur)
+            buf = lax.dynamic_update_slice(buf, row, (i, pos_c[i], 0, 0))
+        return buf
+
+    def local(qq, kc, vc, kn, vn, ln, pos_loc):
+        off = pos_loc[0]
+        s_loc = kc.shape[1]
+        pos = ln - off
+        ok = (pos >= 0) & (pos < s_loc)
+        pos_c = jnp.clip(pos, 0, s_loc - 1)
+        kc = write_rows(kc, kn, pos_c, ok)
+        vc = write_rows(vc, vn, pos_c, ok)
+        m_i, l_i, o_i = _partial_decode(qq, kc, vc, ln + 1, off,
+                                        window=window)
+        if seq_axis:
+            m = lax.pmax(m_i, seq_axis)
+            alpha = jnp.exp(m_i - m)
+            l = lax.psum(l_i * alpha, seq_axis)
+            o = lax.psum(o_i * alpha[..., None], seq_axis)
+        else:
+            l, o = l_i, o_i
+        out = o / jnp.maximum(l, 1e-30)[..., None]
+        return out.reshape(qq.shape).astype(qq.dtype), kc, vc
+
+    return jax.shard_map(
+        local, mesh=mesh,
+        in_specs=(q_spec, cache_spec, cache_spec, new_spec, new_spec,
+                  P(dp), P(seq_axis)),
+        out_specs=(q_spec, cache_spec, cache_spec),
+        axis_names=manual, check_vma=False,
+    )(q, k_cache, v_cache, k_new, v_new, lengths, pos_iota)

@@ -1,0 +1,135 @@
+"""Sharding policies for the LM stack (logical-axis rules, t5x-style).
+
+Every parameter is created together with a tuple of *logical* axis names
+(see models/transformer.py); a policy maps logical names to mesh axes.
+
+Policies:
+- TRAIN   : FSDP + TP.  Weight matrices are 2D-sharded ("d_model" over the
+            data axis, "ff"/"heads" over the model axis) so a 123B model's
+            optimizer state divides by the full chip count; GSPMD inserts
+            the ZeRO-3 all-gathers / reduce-scatters inside the layer scan.
+- SERVE   : TP only on the model axis (weights replicated over data so
+            decode needs no per-step param all-gathers); the big MLPs of
+            >=100B models are 2D-sharded over (data, model) instead.
+- The batch ("dp") axes are ("pod", "data") when the pod axis exists.
+
+Archs whose head counts do not divide the model axis (musicgen 24H,
+qwen1.5 20H, recurrentgemma 10H) zero-pad q (and, for MHA, kv) heads to the
+next multiple of 16 — exact function, bounded extra projection flops.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Mapping, Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def dp_axes(mesh: Mesh) -> tuple[str, ...]:
+    """The pure-data-parallel axes of a mesh: ('pod','data') or ('data',)."""
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingPolicy:
+    """logical axis name -> mesh axis (or None = replicate)."""
+    rules: Mapping[str, Optional[str | tuple[str, ...]]]
+    name: str = "custom"
+
+    def spec(self, logical_axes: tuple[str | None, ...]) -> P:
+        return P(*(self.rules.get(a) if a is not None else None
+                   for a in logical_axes))
+
+    def with_overrides(self, name=None, **overrides) -> "ShardingPolicy":
+        rules = dict(self.rules)
+        rules.update(overrides)
+        return ShardingPolicy(rules=rules, name=name or self.name)
+
+
+def train_policy(mesh: Mesh, *, tp_heads: bool, tp_kv: bool,
+                 fsdp: bool = True) -> ShardingPolicy:
+    fs = "data" if fsdp else None
+    return ShardingPolicy(name="train", rules={
+        "layers": None,
+        "vocab": "model",
+        "embed_d": fs,
+        "d_model_in": fs,
+        "d_model_out": fs,
+        "attn_din": fs,
+        "attn_dout": fs,
+        "qheads": "model" if tp_heads else None,
+        "kv_heads": "model" if tp_kv else None,
+        "head_dim": None,
+        "ff": "model",
+        "experts": "model",
+        "rnn": "model",
+        "norm": None,
+        "lora": None,
+    })
+
+
+def serve_policy(mesh: Mesh, *, tp_heads: bool, tp_kv: bool,
+                 mlp_2d: bool = False, seq_shard_cache: bool = False
+                 ) -> ShardingPolicy:
+    """TP-only policy for decode.  ``mlp_2d`` spreads the FFN over
+    (data, model) jointly (needed for >=100B params to fit without FSDP
+    gathers); ``seq_shard_cache`` pairs with flash-decode (attention
+    projections replicated, KV cache sharded on sequence over "model")."""
+    heads = None if seq_shard_cache else ("model" if tp_heads else None)
+    kv = None if seq_shard_cache else ("model" if tp_kv else None)
+    # 100B-class serving (mlp_2d + replicated heads): spread the attention
+    # projections over ("data","model") on d_model — row-parallel with a
+    # tiny S=1 psum — so no multi-GB weight replica per chip.
+    attn_2d = mlp_2d and heads is None
+    return ShardingPolicy(name="serve", rules={
+        "layers": None,
+        "vocab": "model",
+        "embed_d": None,
+        "d_model_in": "data" if mlp_2d else None,
+        "d_model_out": "data" if mlp_2d else None,
+        "attn_din": ("data", "model") if attn_2d else (
+            "data" if mlp_2d else None),
+        "attn_dout": "model" if attn_2d else ("data" if mlp_2d else None),
+        "qheads": heads,
+        "kv_heads": kv,
+        "head_dim": None,
+        "ff": "model",
+        "experts": "model",
+        "rnn": "model",
+        "norm": None,
+        "lora": None,
+    })
+
+
+def tree_specs(logical_tree, policy: ShardingPolicy):
+    """Map a pytree of logical-axis tuples to a pytree of PartitionSpecs."""
+    return jax.tree.map(
+        policy.spec, logical_tree,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            isinstance(e, (str, type(None))) for e in x))
+
+
+def tree_shardings(logical_tree, policy: ShardingPolicy, mesh: Mesh):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s),
+                        tree_specs(logical_tree, policy),
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def vocab_axis(dp):
+    """'model' for the activation vocab dim, unless 'model' is already a
+    batch axis (tp1 remap) — a mesh axis may appear once per spec."""
+    flat = ()
+    if dp:
+        for e in (dp if isinstance(dp, tuple) else (dp,)):
+            flat += (e if isinstance(e, tuple) else (e,))
+    return None if "model" in flat else "model"
+
+
+def constrain(x, mesh: Mesh, *spec_entries):
+    """with_sharding_constraint that tolerates meshes missing some axes."""
+    fixed = tuple(
+        e if (e is None or all(a in mesh.axis_names for a in ((e,) if isinstance(e, str) else e)))
+        else None
+        for e in spec_entries)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, P(*fixed)))

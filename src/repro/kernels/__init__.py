@@ -1,0 +1,12 @@
+"""Pallas TPU kernels for the cuMF hot spots (+ jnp oracles).
+
+- hermitian.py   : fused get_hermitian_x + B_u (MO-ALS, paper §3.3) — the
+                   VMEM-scratch accumulator is the register-file analogue.
+- batch_solve.py : batched f x f Cholesky solve (cuBLAS batch_solve analogue).
+- ops.py         : jitted wrappers (gather + padding + kernel/oracle dispatch).
+- ref.py         : pure-jnp oracles; the source of truth for every kernel test.
+"""
+
+from repro.kernels.ops import fused_herm, batch_solve, als_update_factor, default_mode
+
+__all__ = ["fused_herm", "batch_solve", "als_update_factor", "default_mode"]

@@ -1,0 +1,105 @@
+"""Pallas TPU kernel: batched SPD Cholesky solve (cuMF's batch_solve phase).
+
+cuMF delegates ``A_u x_u = B_u`` to cuBLAS batched routines.  On TPU we give
+the phase its own in-VMEM kernel: each grid step loads a batch of TB
+(F x F) Hermitian systems, runs an unblocked right-looking Cholesky, then a
+forward and a backward triangular solve, all without leaving VMEM (an F=128
+fp32 tile is 64 KB — 0.4% of VMEM).
+
+Dynamic scalar indexing on the lane dimension is not TPU-friendly, so every
+row/column extraction is expressed as a one-hot contraction and every
+triangular constraint as a ``jnp.where`` mask — the standard trick for
+in-kernel factorizations.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _cholesky_inplace(A: jax.Array) -> jax.Array:
+    """Right-looking Cholesky of a batch [TB, F, F]; returns lower L."""
+    TB, F, _ = A.shape
+    idx = jax.lax.iota(jnp.int32, F)
+
+    def body(j, carry):
+        M, L = carry
+        ej = (idx == j).astype(M.dtype)                       # one-hot [F]
+        dj = jnp.einsum("bfg,f,g->b", M, ej, ej)              # M[:, j, j]
+        dj = jnp.maximum(dj, 1e-20)
+        colj = jnp.einsum("bfg,g->bf", M, ej)                 # M[:, :, j]
+        c = jnp.where(idx[None, :] >= j, colj * jax.lax.rsqrt(dj)[:, None], 0.0)
+        L = L + c[:, :, None] * ej[None, None, :]             # L[:, :, j] = c
+        ct = jnp.where(idx[None, :] > j, c, 0.0)              # strict trailing part
+        M = M - ct[:, :, None] * ct[:, None, :]
+        return (M, L)
+
+    _, L = jax.lax.fori_loop(0, F, body, (A, jnp.zeros_like(A)))
+    return L
+
+
+def _trsv_lower(L: jax.Array, b: jax.Array) -> jax.Array:
+    """Solve L y = b (forward substitution), batch [TB, F, F] / [TB, F]."""
+    TB, F = b.shape
+    idx = jax.lax.iota(jnp.int32, F)
+
+    def body(j, y):
+        ej = (idx == j).astype(b.dtype)
+        lrow = jnp.einsum("bfg,f->bg", L, ej)                 # L[j, :]
+        s = jnp.einsum("bg,bg->b", jnp.where(idx[None, :] < j, lrow, 0.0), y)
+        bj = jnp.einsum("bf,f->b", b, ej)
+        ljj = jnp.einsum("bg,g->b", lrow, ej)
+        yj = (bj - s) / jnp.maximum(ljj, 1e-20)
+        return y + yj[:, None] * ej[None, :]
+
+    return jax.lax.fori_loop(0, F, body, jnp.zeros_like(b))
+
+
+def _trsv_upper_t(L: jax.Array, y: jax.Array) -> jax.Array:
+    """Solve L^T x = y (back substitution on the transposed factor)."""
+    TB, F = y.shape
+    idx = jax.lax.iota(jnp.int32, F)
+
+    def body(t, x):
+        j = F - 1 - t
+        ej = (idx == j).astype(y.dtype)
+        lcol = jnp.einsum("bfg,g->bf", L, ej)                 # L[:, j] == L^T[j, :]
+        s = jnp.einsum("bf,bf->b", jnp.where(idx[None, :] > j, lcol, 0.0), x)
+        yj = jnp.einsum("bf,f->b", y, ej)
+        ljj = jnp.einsum("bf,f->b", lcol, ej)
+        xj = (yj - s) / jnp.maximum(ljj, 1e-20)
+        return x + xj[:, None] * ej[None, :]
+
+    return jax.lax.fori_loop(0, F, body, jnp.zeros_like(y))
+
+
+def _batch_solve_kernel(a_ref, b_ref, x_ref):
+    A = a_ref[...].astype(jnp.float32)        # [TB, F, F]
+    b = b_ref[...].astype(jnp.float32)        # [TB, F]
+    L = _cholesky_inplace(A)
+    y = _trsv_lower(L, b)
+    x_ref[...] = _trsv_upper_t(L, y)
+
+
+def batch_solve_pallas(
+    A: jax.Array,      # [m, F, F] SPD
+    B: jax.Array,      # [m, F]
+    *,
+    tb: int = 8,
+    interpret: bool = False,
+) -> jax.Array:
+    """x_u = A_u^{-1} B_u for every u, one VMEM-resident batch per grid step."""
+    m, F, _ = A.shape
+    assert m % tb == 0, (m, tb)
+    return pl.pallas_call(
+        _batch_solve_kernel,
+        grid=(m // tb,),
+        in_specs=[
+            pl.BlockSpec((tb, F, F), lambda i: (i, 0, 0)),
+            pl.BlockSpec((tb, F), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((tb, F), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, F), jnp.float32),
+        interpret=interpret,
+    )(A, B)

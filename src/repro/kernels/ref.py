@@ -1,0 +1,53 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the *definitions of correctness*: each kernel test sweeps shapes
+and dtypes and asserts allclose against these functions.  They are also the
+fallback execution path on backends without Pallas support.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def mask_from_cnt(cnt: jax.Array, K: int, dtype=jnp.float32) -> jax.Array:
+    """[m] counts -> [m, K] 0/1 validity mask."""
+    k = jnp.arange(K, dtype=jnp.int32)
+    return (k[None, :] < cnt[:, None]).astype(dtype)
+
+
+def herm_ref(
+    g: jax.Array,      # [m, K, F] gathered theta rows (garbage in padding slots)
+    val: jax.Array,    # [m, K]    rating values (0 in padding)
+    mask: jax.Array,   # [m, K]    1.0 where slot is a real nonzero
+    diag: jax.Array,   # [m]       weighted-lambda diagonal (lambda * n_u, or 1 for empty rows)
+) -> tuple[jax.Array, jax.Array]:
+    """Oracle for the fused get_hermitian + B_u kernel.
+
+    A_u = sum_k mask[u,k] * g[u,k,:] g[u,k,:]^T + diag[u] * I
+    B_u = sum_k val[u,k]  * g[u,k,:]
+    """
+    F = g.shape[-1]
+    gm = g * mask[..., None]
+    A = jnp.einsum("ukf,ukg->ufg", gm, g, preferred_element_type=jnp.float32)
+    A = A + diag[:, None, None] * jnp.eye(F, dtype=A.dtype)
+    B = jnp.einsum("uk,ukf->uf", val * mask, g, preferred_element_type=jnp.float32)
+    return A, B
+
+
+def batch_solve_ref(A: jax.Array, B: jax.Array) -> jax.Array:
+    """Oracle for batched SPD solve: x_u = A_u^{-1} B_u via Cholesky."""
+    L = jax.lax.linalg.cholesky(A)
+    y = jax.lax.linalg.triangular_solve(
+        L, B[..., None], left_side=True, lower=True)
+    x = jax.lax.linalg.triangular_solve(
+        L, y, left_side=True, lower=True, transpose_a=True)
+    return x[..., 0]
+
+
+def fused_herm_gathered_ref(theta, idx, val, cnt, lam):
+    """End-to-end oracle: gather + herm in one call (what ops.fused_herm computes)."""
+    g = jnp.take(theta, idx, axis=0)
+    mask = mask_from_cnt(cnt, idx.shape[1], theta.dtype)
+    diag = jnp.where(cnt > 0, lam * cnt.astype(jnp.float32), 1.0)
+    return herm_ref(g, val, mask, diag)

@@ -1,0 +1,266 @@
+"""Cell builders: (arch x shape x mesh) -> AOT-lowerable programs.
+
+Shared by launch/dryrun.py (lower + compile + memory proof) and
+benchmarks/roofline.py (cost extraction).  Everything here works on
+ShapeDtypeStructs only — no device allocation ever happens.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs import registry
+from repro.configs.base import ArchSpec, ModelConfig, ShapeConfig, SHAPES
+from repro.distributed import sharding as shp
+from repro.models import lm as lm_mod
+from repro.models import transformer as T
+from repro.training import optimizer as opt_mod
+
+
+@dataclasses.dataclass(frozen=True)
+class CellOpts:
+    """Implementation knobs a §Perf iteration can flip per cell."""
+    causal_skip: bool = False
+    fused_loss: bool = False
+    chunk_q: int = 512
+    chunk_kv: int = 512
+    pod_compress: bool = False
+    remat: bool = True
+    microbatch: Optional[int] = None     # override ArchSpec.microbatch
+    tp1: bool = False   # re-map "model" axis to pure data parallel (256-way
+                        # FSDP, no tensor parallelism) — the fix for small
+                        # dense models whose TP activation psums dominate
+
+
+def dp_size(mesh: Mesh) -> int:
+    return int(jax.numpy.prod(jnp.asarray(
+        [mesh.shape[a] for a in shp.dp_axes(mesh)])))
+
+
+def _dp_spec(mesh: Mesh, batch: int, tp1: bool = False):
+    axes = shp.dp_axes(mesh)
+    if tp1 and "model" in mesh.axis_names:
+        axes = axes + ("model",)
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    if batch % n != 0:
+        return None          # e.g. long_500k batch=1: replicate
+    return axes if len(axes) > 1 else axes[0]
+
+
+def param_structs(cfg: ModelConfig, policy: shp.ShardingPolicy, mesh: Mesh,
+                  dtype=jnp.float32):
+    shapes = T.param_shapes(cfg)
+
+    def mk(leaf):
+        shape, axes = leaf
+        return jax.ShapeDtypeStruct(
+            shape, dtype, sharding=NamedSharding(mesh, policy.spec(axes)))
+
+    return jax.tree.map(
+        mk, shapes,
+        is_leaf=lambda x: isinstance(x, tuple) and len(x) == 2
+        and isinstance(x[0], tuple))
+
+
+def _like(struct, ref_struct):
+    """ShapeDtypeStruct with ref's sharding if shapes match, else replicate
+    trailing-compatible spec (adafactor factored stats)."""
+    return struct
+
+
+def train_state_structs(spec: ArchSpec, mesh: Mesh, tp1: bool = False):
+    cfg = spec.model
+    policy = _train_policy(spec, mesh, tp1=tp1)
+    p_structs = param_structs(cfg, policy, mesh, jnp.float32)
+
+    if spec.opt == "adamw":
+        m = jax.tree.map(lambda s: s, p_structs)
+        v = jax.tree.map(lambda s: s, p_structs)
+        opt = opt_mod.AdamState(m=m, v=v, step=jax.ShapeDtypeStruct(
+            (), jnp.int32, sharding=NamedSharding(mesh, P())))
+    else:  # adafactor: row/col stats lose the last / second-to-last dim
+        def vr_of(s):
+            shape = s.shape[:-1] if len(s.shape) >= 2 else s.shape
+            spec_ = s.sharding.spec
+            sub = P(*spec_[:len(shape)]) if len(spec_) >= len(shape) else P()
+            return jax.ShapeDtypeStruct(shape, jnp.float32,
+                                        sharding=NamedSharding(mesh, sub))
+
+        def vc_of(s):
+            if len(s.shape) >= 2:
+                shape = s.shape[:-2] + s.shape[-1:]
+                spec_ = list(s.sharding.spec) + [None] * (len(s.shape) - len(s.sharding.spec))
+                sub = P(*(spec_[:-2] + spec_[-1:]))
+            else:
+                shape, sub = (1,), P()
+            return jax.ShapeDtypeStruct(shape, jnp.float32,
+                                        sharding=NamedSharding(mesh, sub))
+        opt = opt_mod.AdafactorState(
+            vr=jax.tree.map(vr_of, p_structs),
+            vc=jax.tree.map(vc_of, p_structs),
+            step=jax.ShapeDtypeStruct((), jnp.int32,
+                                      sharding=NamedSharding(mesh, P())))
+    return lm_mod.TrainState(
+        params=p_structs, opt=opt,
+        step=jax.ShapeDtypeStruct((), jnp.int32,
+                                  sharding=NamedSharding(mesh, P())))
+
+
+def _train_policy(spec: ArchSpec, mesh: Mesh,
+                  tp1: bool = False) -> shp.ShardingPolicy:
+    cfg = spec.model
+    tp = mesh.shape["model"]
+    tp_heads = cfg.padded_heads % tp == 0 and cfg.padded_heads >= tp
+    tp_kv = cfg.n_kv % tp == 0
+    pol = shp.train_policy(mesh, tp_heads=tp_heads, tp_kv=tp_kv,
+                           fsdp=spec.fsdp)
+    if tp1:
+        # every weight 1D-sharded over the merged ("data","model") axis;
+        # batch shards over both axes; zero TP collectives remain
+        both = ("data", "model")
+        pol = pol.with_overrides(
+            name="train_tp1", vocab=both, embed_d=None,
+            d_model_in=both, d_model_out=both, attn_din=both,
+            attn_dout=both, qheads=None, kv_heads=None, ff=None,
+            experts=None, rnn=None)
+    return pol
+
+
+def _serve_policy(spec: ArchSpec, mesh: Mesh) -> shp.ShardingPolicy:
+    cfg = spec.model
+    tp = mesh.shape["model"]
+    tp_heads = cfg.padded_heads % tp == 0 and cfg.padded_heads >= tp
+    tp_kv = cfg.n_kv % tp == 0
+    return shp.serve_policy(mesh, tp_heads=tp_heads, tp_kv=tp_kv,
+                            mlp_2d=spec.serve_mlp_2d,
+                            seq_shard_cache=spec.serve_seq_shard)
+
+
+def build_train_cell(spec: ArchSpec, shape: ShapeConfig, mesh: Mesh,
+                     opts: CellOpts = CellOpts()):
+    """Returns (fn, args) ready for jax.jit(fn, ...).lower(*args)."""
+    cfg = spec.model
+    mb = opts.microbatch or spec.microbatch
+    dpn = dp_size(mesh) * (mesh.shape["model"] if opts.tp1 else 1)
+    mb = max(1, min(mb, shape.batch // dpn))
+    opt_cfg = opt_mod.OptConfig(name=spec.opt)
+    step = lm_mod.make_train_step(
+        cfg, opt_cfg, mesh=mesh, microbatch=mb,
+        remat=opts.remat and spec.remat, fused_loss=opts.fused_loss,
+        causal_skip=opts.causal_skip, chunk_q=opts.chunk_q,
+        chunk_kv=opts.chunk_kv, pod_compress=opts.pod_compress)
+    state = train_state_structs(spec, mesh, tp1=opts.tp1)
+    dp = _dp_spec(mesh, shape.batch, tp1=opts.tp1)
+    batch = registry.input_specs(cfg, shape, mesh=mesh, dp_spec=dp)
+    meta = {"microbatch": mb, "opt": spec.opt, "tp1": opts.tp1}
+    return step, (state, batch), {"donate_argnums": (0,)}, meta
+
+
+def build_prefill_cell(spec: ArchSpec, shape: ShapeConfig, mesh: Mesh,
+                       opts: CellOpts = CellOpts()):
+    cfg = spec.model
+    prefill = lm_mod.make_prefill_step(
+        cfg, mesh=mesh, serve_seq_shard=spec.serve_seq_shard,
+        chunk_q=opts.chunk_q, chunk_kv=opts.chunk_kv,
+        causal_skip=opts.causal_skip)
+    policy = _serve_policy(spec, mesh)
+    params = param_structs(cfg, policy, mesh, jnp.bfloat16)
+    dp = _dp_spec(mesh, shape.batch)
+    batch = registry.input_specs(cfg, shape, mesh=mesh, dp_spec=dp)
+    # pin the produced cache to the decode-time layout (seq over "model"
+    # for flash-decode archs) — otherwise the [L, B, S, KV, dh] output is
+    # only batch-sharded and blows the per-device budget.
+    cache_struct = registry.cache_specs(
+        cfg, shape, mesh=mesh, dp_spec=dp,
+        seq_shard_cache=spec.serve_seq_shard, stacked=True)
+    out_shardings = (NamedSharding(mesh, P(dp)),
+                     jax.tree.map(lambda s: s.sharding, cache_struct))
+    return prefill, (params, batch), {"out_shardings": out_shardings}, {}
+
+
+def build_decode_cell(spec: ArchSpec, shape: ShapeConfig, mesh: Mesh,
+                      opts: CellOpts = CellOpts()):
+    cfg = spec.model
+    decode = lm_mod.make_decode_step(
+        cfg, mesh=mesh, serve_seq_shard=spec.serve_seq_shard)
+    policy = _serve_policy(spec, mesh)
+    params = param_structs(cfg, policy, mesh, jnp.bfloat16)
+    dp = _dp_spec(mesh, shape.batch)
+    inp = registry.input_specs(cfg, shape, mesh=mesh, dp_spec=dp)
+    cache = registry.cache_specs(cfg, shape, mesh=mesh, dp_spec=dp,
+                                 seq_shard_cache=spec.serve_seq_shard)
+    out_shardings = (NamedSharding(mesh, P(dp)),
+                     jax.tree.map(lambda s: s.sharding, cache),
+                     NamedSharding(mesh, P(dp)))
+    return (decode, (params, cache, inp["tokens_or_embeds"], inp["lengths"]),
+            {"donate_argnums": (1,), "out_shardings": out_shardings}, {})
+
+
+def build_cell(arch_id: str, shape_name: str, mesh: Mesh,
+               opts: CellOpts = CellOpts()):
+    """Dispatch on the shape kind.  Returns (fn, args, jit_kwargs, meta)."""
+    spec = registry.get_arch(arch_id)
+    shape = SHAPES[shape_name]
+    skip = spec.skip_reason(shape)
+    if skip:
+        return None, None, None, {"skip": skip}
+    if shape.kind == "train":
+        return build_train_cell(spec, shape, mesh, opts)
+    if shape.kind == "prefill":
+        return build_prefill_cell(spec, shape, mesh, opts)
+    return build_decode_cell(spec, shape, mesh, opts)
+
+
+# ---------------------------------------------------------------------------
+# ALS cells (the paper's own workload)
+# ---------------------------------------------------------------------------
+
+def build_als_cell(shape_name: str, mesh: Mesh, *, scheme: str = "two_phase",
+                   row_block: int = 2048, f_pad: Optional[int] = None):
+    """One SU-ALS update-X wave at a Table-5 dataset scale."""
+    from repro.configs.cumf_als import ALS_SHAPES
+    from repro.distributed import su_als
+
+    als = ALS_SHAPES[shape_name]
+    spec = als.spec
+    col_axes = tuple(a for a in ("model", "pod") if a in mesh.axis_names)
+    p_total = 1
+    for a in col_axes:
+        p_total *= mesh.shape[a]
+    q = mesh.shape["data"]
+    f = f_pad or spec.f
+
+    m_wave = als.rows_per_wave
+    granule = q * p_total * row_block
+    m_wave = max(granule, (m_wave // granule) * granule)
+    n_pad = -(-spec.n // p_total) * p_total
+    k_loc = als.k_pad
+
+    ux, ut, it = su_als.make_su_als_fns(
+        mesh, spec.lam, scheme=scheme, mode="ref", row_block=row_block,
+        f_mult=128)
+
+    col_dim = col_axes[::-1] if len(col_axes) > 1 else col_axes[0]
+    theta = jax.ShapeDtypeStruct(
+        (n_pad, f), jnp.float32,
+        sharding=NamedSharding(mesh, P(col_dim, None)))
+    idx = jax.ShapeDtypeStruct(
+        (m_wave, p_total * k_loc), jnp.int32,
+        sharding=NamedSharding(mesh, P("data", col_dim)))
+    val = jax.ShapeDtypeStruct(
+        (m_wave, p_total * k_loc), jnp.float32,
+        sharding=NamedSharding(mesh, P("data", col_dim)))
+    cnt = jax.ShapeDtypeStruct(
+        (m_wave, p_total), jnp.int32,
+        sharding=NamedSharding(mesh, P("data", col_dim)))
+    meta = {"m_wave": m_wave, "k_loc": k_loc, "p": p_total, "q": q,
+            "f": f, "scheme": scheme, "row_block": row_block,
+            "waves_total": max(1, -(-spec.m // m_wave))}
+    return ux, (theta, idx, val, cnt), (), meta

@@ -1,0 +1,42 @@
+"""Production meshes.
+
+All functions build meshes lazily — importing this module never touches JAX
+device state (required so that smoke tests see 1 CPU device while the
+dry-run sees 512 placeholder devices via XLA_FLAGS).
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import AxisType
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """The target deployment mesh: one TPU v5e pod (16 x 16 = 256 chips) or
+    two pods (2 x 16 x 16 = 512 chips).
+
+    Axis roles:
+      "data"  — DP/FSDP for LMs; cuMF's q (X row shards) for ALS.
+      "model" — TP/EP/SP for LMs; cuMF's p (Theta column shards) for ALS.
+      "pod"   — extra DP replica set for LMs; extra column shards + the slow
+                link of the two-phase topology-aware reduction for ALS.
+    """
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_mesh(shape, axes):
+    """Small/test meshes with the same axis conventions."""
+    return jax.make_mesh(tuple(shape), tuple(axes),
+                         axis_types=(AxisType.Auto,) * len(axes))
+
+
+# Hardware constants of the target (TPU v5e-class chip) — single source of
+# truth for the roofline analysis.
+PEAK_FLOPS_BF16 = 197e12      # flop/s per chip
+HBM_BW = 819e9                # bytes/s per chip
+ICI_BW = 50e9                 # bytes/s per link (intra-pod)
+DCI_BW = 6.25e9               # bytes/s per chip (inter-pod data-center links)
+HBM_BYTES = 16 * (1 << 30)    # 16 GiB HBM per chip
+VMEM_BYTES = 16 * (1 << 20)

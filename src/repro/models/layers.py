@@ -1,0 +1,197 @@
+"""Primitive layers: norms, RoPE, MLPs, attention math (GQA, chunked, decode).
+
+All functions are pure; parameters are plain arrays.  Attention comes in
+three execution paths:
+
+- ``attention_full``    : O(S^2) masked attention — smoke tests, short seq.
+- ``attention_chunked`` : online-softmax over (q-chunk, kv-chunk) tiles via
+  ``lax.scan`` — bounded memory for 32k prefill / 4k train.  With
+  ``causal_skip=True`` the strictly-upper-triangular chunk pairs are skipped
+  at runtime through ``lax.cond`` (a §Perf optimization; the baseline sweeps
+  all pairs with masking).
+- ``attention_decode``  : one query position against a KV cache.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+NEG_INF = -1e30
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    out = x.astype(jnp.float32) * lax.rsqrt(var + eps)
+    return (out * (1.0 + scale.astype(jnp.float32))).astype(x.dtype)
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """Rotary embedding.  x [..., S, H, dh]; positions [..., S] (int32)."""
+    dh = x.shape[-1]
+    half = dh // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    angles = positions[..., None].astype(jnp.float32) * freq      # [..., S, half]
+    sin = jnp.sin(angles)[..., None, :]                           # [..., S, 1, half]
+    cos = jnp.cos(angles)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(positions: jax.Array, d: int) -> jax.Array:
+    """Classic transformer sinusoidal embeddings (musicgen backbone)."""
+    half = d // 2
+    freq = 10000.0 ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freq
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+def swiglu_mlp(x, w_gate, w_up, w_down):
+    g = jnp.einsum("...d,df->...f", x, w_gate)
+    u = jnp.einsum("...d,df->...f", x, w_up)
+    return jnp.einsum("...f,fd->...d", jax.nn.silu(g) * u, w_down)
+
+
+def gelu_mlp(x, w_in, b_in, w_out, b_out):
+    h = jnp.einsum("...d,df->...f", x, w_in) + b_in
+    return jnp.einsum("...f,fd->...d", jax.nn.gelu(h), w_out) + b_out
+
+
+def geglu_mlp(x, w_gate, w_up, w_down):
+    g = jnp.einsum("...d,df->...f", x, w_gate)
+    u = jnp.einsum("...d,df->...f", x, w_up)
+    return jnp.einsum("...f,fd->...d", jax.nn.gelu(g) * u, w_down)
+
+
+# ---------------------------------------------------------------------------
+# Attention math (GQA throughout; H must be a multiple of KV)
+# ---------------------------------------------------------------------------
+
+def _split_groups(q, n_kv):
+    b, s, h, dh = q.shape
+    return q.reshape(b, s, n_kv, h // n_kv, dh)
+
+
+def attention_full(q, k, v, *, causal=True, window=None,
+                   q_positions=None, k_positions=None):
+    """Masked O(S^2) attention.  q [B,S,H,dh]; k/v [B,T,KV,dh]."""
+    b, s, h, dh = q.shape
+    kv = k.shape[2]
+    qg = _split_groups(q, kv)
+    scores = jnp.einsum("bskgd,btkd->bkgst", qg, k) * (dh ** -0.5)
+    qp = q_positions if q_positions is not None else jnp.arange(s)
+    kp = k_positions if k_positions is not None else jnp.arange(k.shape[1])
+    mask = jnp.ones((s, k.shape[1]), dtype=bool)
+    if causal:
+        mask &= kp[None, :] <= qp[:, None]
+    if window is not None:
+        mask &= kp[None, :] > qp[:, None] - window
+    scores = jnp.where(mask[None, None, None], scores.astype(jnp.float32), NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgst,btkd->bskgd", p, v)
+    return out.reshape(b, s, h, dh)
+
+
+def attention_chunked(
+    q, k, v, *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    chunk_q: int = 512,
+    chunk_kv: int = 512,
+    causal_skip: bool = False,
+):
+    """Online-softmax chunked attention (memory O(S * chunk))."""
+    b, s, h, dh = q.shape
+    t = k.shape[1]
+    kv = k.shape[2]
+    g = h // kv
+    cq = min(chunk_q, s)
+    ck = min(chunk_kv, t)
+    assert s % cq == 0 and t % ck == 0, (s, cq, t, ck)
+    nq, nk = s // cq, t // ck
+    scale = dh ** -0.5
+
+    qr = q.reshape(b, nq, cq, kv, g, dh)
+    kr = k.reshape(b, nk, ck, kv, dh).swapaxes(0, 1)   # [nk, b, ck, kv, dh]
+    vr = v.reshape(b, nk, ck, kv, dh).swapaxes(0, 1)
+
+    def q_chunk(carry, inp):
+        i, qc = inp                                  # qc [b, cq, kv, g, dh]
+        qpos = i * cq + jnp.arange(cq)
+
+        def kv_chunk(state, kin):
+            j, kc, vc = kin                          # kc/vc [b, ck, kv, dh]
+            m, l, acc = state
+
+            def compute(state):
+                m, l, acc = state
+                kpos = j * ck + jnp.arange(ck)
+                sc = jnp.einsum("bqkgd,btkd->bkgqt", qc, kc,
+                                preferred_element_type=jnp.float32) * scale
+                msk = jnp.ones((cq, ck), dtype=bool)
+                if causal:
+                    msk &= kpos[None, :] <= qpos[:, None]
+                if window is not None:
+                    msk &= kpos[None, :] > qpos[:, None] - window
+                sc = jnp.where(msk[None, None, None], sc, NEG_INF)
+                m_new = jnp.maximum(m, sc.max(axis=-1))
+                p = jnp.exp(sc - m_new[..., None])
+                alpha = jnp.exp(m - m_new)
+                l_new = l * alpha + p.sum(axis=-1)
+                acc_new = acc * alpha[..., None] + jnp.einsum(
+                    "bkgqt,btkd->bkgqd", p.astype(vc.dtype), vc,
+                    preferred_element_type=jnp.float32)
+                return m_new, l_new, acc_new
+
+            if causal_skip:
+                # chunk-level bounds: any (q, k) pair inside the tile live?
+                live = jnp.asarray(True)
+                if causal:
+                    live &= j * ck <= i * cq + cq - 1
+                if window is not None:
+                    live &= j * ck + ck - 1 > i * cq - window
+                state = lax.cond(live, compute, lambda st: st, state)
+            else:
+                state = compute(state)
+            return state, None
+
+        init = (
+            jnp.full((b, kv, g, cq), NEG_INF, jnp.float32),
+            jnp.zeros((b, kv, g, cq), jnp.float32),
+            jnp.zeros((b, kv, g, cq, dh), jnp.float32),
+        )
+        (m, l, acc), _ = lax.scan(kv_chunk, init, (jnp.arange(nk), kr, vr))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return carry, out.astype(q.dtype)            # [b, kv, g, cq, dh]
+
+    _, outs = lax.scan(q_chunk, None, (jnp.arange(nq), qr.swapaxes(0, 1)))
+    # outs [nq, b, kv, g, cq, dh] -> [b, s, h, dh]
+    out = outs.transpose(1, 0, 4, 2, 3, 5).reshape(b, s, h, dh)
+    return out
+
+
+def attention_decode(q, k_cache, v_cache, length, *, window=None):
+    """One-token decode.  q [B,H,dh]; caches [B,Smax,KV,dh]; length [B] int32
+    = number of valid cache positions (including the token just written)."""
+    b, h, dh = q.shape
+    kv = k_cache.shape[2]
+    qg = q.reshape(b, kv, h // kv, dh)
+    sc = jnp.einsum("bkgd,btkd->bkgt", qg, k_cache,
+                    preferred_element_type=jnp.float32) * (dh ** -0.5)
+    idx = jnp.arange(k_cache.shape[1])
+    msk = idx[None, :] < length[:, None]
+    if window is not None:
+        msk &= idx[None, :] >= (length[:, None] - window)
+    sc = jnp.where(msk[:, None, None, :], sc, NEG_INF)
+    p = jax.nn.softmax(sc, axis=-1)
+    out = jnp.einsum("bkgt,btkd->bkgd", p.astype(v_cache.dtype), v_cache)
+    return out.reshape(b, h, dh)

@@ -1,0 +1,173 @@
+"""Mixture-of-Experts FFN with sort-based (dropping) dispatch + EP sharding.
+
+Routing: softmax router, top-k experts per token, capacity-bucketed.  The
+dispatch is *sort-based* (argsort token-expert pairs by expert, scatter into
+[E, C, d] buffers) rather than GShard one-hot einsums — the one-hot dispatch
+matmul costs T*E*C*d flops which can exceed the expert FFN itself at small
+d_ff (olmoe: d_ff=1024); the sort variant moves T*k*d bytes and spends no
+MXU flops on routing.
+
+Expert parallelism: experts shard over the "model" axis; activations are
+replicated over "model" (standard TP residual stream), so each model rank
+routes identical tokens into its *local* experts and the weighted expert
+outputs are combined with one psum over "model" — the same collective
+pattern as a row-parallel matmul, no all_to_all needed.  This is expressed
+with `jax.shard_map(..., axis_names={"model"})`, leaving the batch axes in
+auto mode.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int
+    top_k: int
+    capacity_factor: float = 1.25
+
+
+def router_topk(logits: jax.Array, k: int):
+    """logits [T, E] -> (weights [T, k] softmaxed over chosen, idx [T, k])."""
+    gates = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    w, idx = lax.top_k(gates, k)
+    w = w / jnp.maximum(w.sum(-1, keepdims=True), 1e-9)
+    return w, idx
+
+
+def _dispatch_local(x, w_topk, idx_topk, n_experts_local, e_lo, capacity):
+    """Sort-based dispatch of this rank's share of token-expert pairs.
+
+    x [T, D]; w_topk/idx_topk [T, k] (global expert ids).  Selects pairs
+    routed to experts [e_lo, e_lo + n_experts_local), buckets them into
+    [E_loc, C, D] with per-expert capacity C, returns (buffers, combine
+    metadata)."""
+    T, D = x.shape
+    k = idx_topk.shape[1]
+    flat_e = idx_topk.reshape(-1)                       # [T*k]
+    flat_w = w_topk.reshape(-1)
+    flat_t = jnp.repeat(jnp.arange(T), k)
+    local = (flat_e >= e_lo) & (flat_e < e_lo + n_experts_local)
+    le = jnp.where(local, flat_e - e_lo, n_experts_local)   # overflow bucket
+    # position of each pair within its expert bucket
+    onehot = jax.nn.one_hot(le, n_experts_local + 1, dtype=jnp.int32)
+    pos = jnp.cumsum(onehot, axis=0) - 1                 # [T*k, E_loc+1]
+    slot_in_e = jnp.take_along_axis(pos, le[:, None], axis=1)[:, 0]
+    keep = local & (slot_in_e < capacity)
+    slot = jnp.where(keep, le * capacity + slot_in_e, n_experts_local * capacity)
+    # scatter in f32: combine precision + works around an XLA SPMD
+    # partitioner failure on bf16 scatter-add (opcode-copy check)
+    buf = jnp.zeros((n_experts_local * capacity + 1, D), jnp.float32)
+    buf = buf.at[slot].add(
+        jnp.where(keep[:, None], x[flat_t], 0).astype(jnp.float32))
+    return (buf[:-1].reshape(n_experts_local, capacity, D).astype(x.dtype),
+            (slot, flat_t, flat_w, keep))
+
+
+def _combine_local(y_buf, meta, T, out_dtype):
+    """Scatter expert outputs back to token order with routing weights
+    (f32 accumulation)."""
+    slot, flat_t, flat_w, keep = meta
+    E_loc, C, D = y_buf.shape
+    flat = jnp.concatenate([y_buf.reshape(E_loc * C, D).astype(jnp.float32),
+                            jnp.zeros((1, D), jnp.float32)], axis=0)
+    gathered = flat[jnp.minimum(slot, E_loc * C)]        # [T*k, D]
+    contrib = jnp.where(keep[:, None],
+                        gathered * flat_w[:, None].astype(jnp.float32), 0.0)
+    out = jnp.zeros((T, D), jnp.float32)
+    return out.at[flat_t].add(contrib).astype(out_dtype)
+
+
+def moe_ffn(params, x, cfg: MoEConfig, mesh=None, fsdp_gather=False):
+    """x [B, S, D] -> [B, S, D].  params: router [D,E], w_gate/w_up [E,D,F],
+    w_down [E,F,D].
+
+    Distributed layout: experts shard over "model"; tokens stay sharded
+    over the batch axes (the shard_map is manual over both, so routing,
+    capacity and dispatch buffers are all *per-data-shard local*); each
+    model rank computes its local experts' contribution for the local
+    tokens and one f32 psum over "model" combines them — the same
+    collective pattern as a row-parallel matmul, no all_to_all.
+
+    ``fsdp_gather``: training shards expert weights 2D (experts over
+    "model" x d_model over "data" — a 27B-param MoE's optimizer state
+    must divide by all 256 chips, not 16); the d_model shards are
+    all-gathered here, ZeRO-3 style, right before use."""
+    B, S, D = x.shape
+    E, k = cfg.n_experts, cfg.top_k
+    xf = x.reshape(B * S, D)
+    T = B * S
+
+    def routed(router, wg, wu, wd, xloc, e_loc, e_lo, t_loc, out_dtype):
+        logits = jnp.einsum("td,de->te", xloc, router.astype(xloc.dtype))
+        wt, it = router_topk(logits, k)
+        capacity = int(cfg.capacity_factor * t_loc * k / E) or 1
+        buf, meta = _dispatch_local(xloc, wt, it, e_loc, e_lo, capacity)
+        h = jnp.einsum("ecd,edf->ecf", buf, wg.astype(buf.dtype))
+        u = jnp.einsum("ecd,edf->ecf", buf, wu.astype(buf.dtype))
+        y = jnp.einsum("ecf,efd->ecd", jax.nn.silu(h) * u, wd.astype(buf.dtype))
+        return _combine_local(y, meta, t_loc, out_dtype)
+
+    tp = mesh.shape["model"] if (mesh is not None
+                                 and "model" in mesh.axis_names) else 1
+    if tp == 1:
+        out = routed(params["router"], params["w_gate"], params["w_up"],
+                     params["w_down"], xf, E, 0, T, xf.dtype)
+        return out.reshape(B, S, D)
+
+    from jax.sharding import PartitionSpec as P
+    assert E % tp == 0
+    e_loc = E // tp
+    dp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    dp_n = 1
+    for a in dp:
+        dp_n *= mesh.shape[a]
+    if B % dp_n != 0:
+        dp, dp_n = (), 1          # replicated batch (e.g. batch=1 decode)
+    t_loc = T // dp_n
+    tok_spec = P(dp) if dp else P()
+    fsdp = fsdp_gather and "data" in mesh.axis_names
+    ws = "data" if fsdp else None
+
+    def ranked(router, wg, wu, wd, xloc):
+        if fsdp:  # ZeRO-3 gather of the d_model shards, right before use
+            router = lax.all_gather(router, "data", axis=0, tiled=True)
+            wg = lax.all_gather(wg, "data", axis=1, tiled=True)
+            wu = lax.all_gather(wu, "data", axis=1, tiled=True)
+            wd = lax.all_gather(wd, "data", axis=2, tiled=True)
+        e_lo = lax.axis_index("model") * e_loc
+        # psum in f32: bf16 psum under shard_map trips an XLA SPMD
+        # partitioner check (f32 combine is numerically right anyway)
+        y = routed(router, wg, wu, wd, xloc, e_loc, e_lo, t_loc, jnp.float32)
+        return lax.psum(y, "model").astype(xloc.dtype)
+
+    out = jax.shard_map(
+        ranked, mesh=mesh,
+        in_specs=(P(ws), P("model", ws), P("model", ws),
+                  P("model", None, ws), tok_spec),
+        out_specs=tok_spec,
+        axis_names=set(dp) | {"model"} | ({"data"} if fsdp else set()),
+        check_vma=False,
+    )(params["router"], params["w_gate"], params["w_up"],
+      params["w_down"], xf)
+    return out.reshape(B, S, D)
+
+
+def moe_param_shapes(d_model: int, d_ff: int, cfg: MoEConfig):
+    """(shape, logical axes) for every MoE parameter.
+
+    Expert weights are 2D-shardable: experts over "model" (EP) and the
+    d_model dim over "data" (FSDP, gathered in moe_ffn when training)."""
+    E = cfg.n_experts
+    return {
+        "router": ((d_model, E), ("d_model_in", None)),
+        "w_gate": ((E, d_model, d_ff), ("experts", "d_model_in", None)),
+        "w_up":   ((E, d_model, d_ff), ("experts", "d_model_in", None)),
+        "w_down": ((E, d_ff, d_model), ("experts", None, "d_model_in")),
+    }

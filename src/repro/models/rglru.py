@@ -1,0 +1,112 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin, arXiv:2402.19427).
+
+Block structure (the "recurrent block" of Griffin):
+
+    x -> [linear in (2 branches)] -> conv1d(w=4, depthwise) -> RG-LRU -> *gate -> linear out
+
+RG-LRU recurrence (real-gated linear recurrent unit), per channel:
+
+    r_t = sigmoid(W_a x_t)              recurrence gate
+    i_t = sigmoid(W_x x_t)              input gate
+    log a_t = -c * softplus(Lambda) * r_t
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+Train/prefill uses ``lax.associative_scan`` (parallel prefix over the
+(a, b) affine maps — O(log S) depth, TPU-friendly); decode is a single
+affine step with carried state.  Gates are computed from the branch input
+(simplification noted in DESIGN.md).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+C_SCALE = 8.0  # Griffin's c constant
+
+
+def _lru_coeffs(params, x):
+    """x [B, S, R] -> (a, b) with h_t = a_t h_{t-1} + b_t."""
+    r = jax.nn.sigmoid(jnp.einsum("bsr,rk->bsk", x, params["w_a"].astype(x.dtype)))
+    i = jax.nn.sigmoid(jnp.einsum("bsr,rk->bsk", x, params["w_x"].astype(x.dtype)))
+    log_a = -C_SCALE * jax.nn.softplus(params["lam"].astype(jnp.float32)) * r.astype(jnp.float32)
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * (
+        i.astype(jnp.float32) * x.astype(jnp.float32))
+    return a, b
+
+
+def rg_lru_scan(params, x, h0=None):
+    """Parallel-scan RG-LRU over a sequence.  x [B, S, R] -> (y, h_last)."""
+    a, b = _lru_coeffs(params, x)
+    if h0 is not None:
+        # fold the carried state into the first step: h_1 = a_1 h_0 + b_1
+        b = b.at[:, 0].add(a[:, 0] * h0)
+
+    def combine(l, r_):
+        al, bl = l
+        ar, br = r_
+        return al * ar, ar * bl + br
+
+    _, h = lax.associative_scan(combine, (a, b), axis=1)
+    return h.astype(x.dtype), h[:, -1]
+
+
+def rg_lru_step(params, x, h):
+    """Single decode step.  x [B, R], h [B, R] -> (y, h_new)."""
+    a, b = _lru_coeffs(params, x[:, None])
+    h_new = a[:, 0] * h + b[:, 0]
+    return h_new.astype(x.dtype), h_new
+
+
+def causal_conv1d(x, kernel, state=None):
+    """Depthwise causal conv, width W.  x [B, S, R]; kernel [W, R].
+
+    ``state`` [B, W-1, R] carries the last W-1 inputs for decode; returns
+    (y, new_state)."""
+    W = kernel.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], W - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)                  # [B, S+W-1, R]
+    y = sum(xp[:, i:i + x.shape[1]] * kernel[i].astype(x.dtype)
+            for i in range(W))
+    return y, xp[:, -(W - 1):]
+
+
+def recurrent_branch(params, x, *, cache=None):
+    """Full Griffin recurrent block body (pre-norm residual handled by caller).
+
+    x [B, S, D] -> (y [B, S, D], new_cache).
+    cache = {"conv": [B, W-1, R], "h": [B, R]} for decode, None for scan.
+    params: w_in_rnn [D,R], w_in_gate [D,R], conv [W,R], w_a [R,R], w_x [R,R],
+            lam [R], w_out [R,D].
+    """
+    u = jnp.einsum("bsd,dr->bsr", x, params["w_in_rnn"].astype(x.dtype))
+    g = jnp.einsum("bsd,dr->bsr", x, params["w_in_gate"].astype(x.dtype))
+    if cache is None:
+        u, conv_state = causal_conv1d(u, params["conv"])
+        y, h_last = rg_lru_scan({k: params[k] for k in ("w_a", "w_x", "lam")}, u)
+        new_cache = {"conv": conv_state, "h": h_last}
+    else:
+        u2, conv_state = causal_conv1d(u, params["conv"], state=cache["conv"])
+        y1, h_new = rg_lru_step(
+            {k: params[k] for k in ("w_a", "w_x", "lam")}, u2[:, 0], cache["h"])
+        y = y1[:, None]
+        new_cache = {"conv": conv_state, "h": h_new}
+    y = y * jax.nn.gelu(g)
+    out = jnp.einsum("bsr,rd->bsd", y, params["w_out"].astype(x.dtype))
+    return out, new_cache
+
+
+def rglru_param_shapes(d_model: int, d_rnn: int, conv_width: int = 4):
+    return {
+        "w_in_rnn":  ((d_model, d_rnn), ("d_model_in", "rnn")),
+        "w_in_gate": ((d_model, d_rnn), ("d_model_in", "rnn")),
+        "conv":      ((conv_width, d_rnn), (None, "rnn")),
+        "w_a":       ((d_rnn, d_rnn), (None, "rnn")),
+        "w_x":       ((d_rnn, d_rnn), (None, "rnn")),
+        "lam":       ((d_rnn,), ("rnn",)),
+        "w_out":     ((d_rnn, d_model), ("rnn", "d_model_out")),
+    }

@@ -1,0 +1,551 @@
+"""Decoder assembly: params, scan-over-layers forward, KV/recurrent caches.
+
+Layer stacking: ``block_pattern`` is cycled over ``n_layers`` and grouped
+into scan "periods" (e.g. recurrentgemma's (rglru, rglru, attn) -> 8
+scanned periods + a 2-layer tail group), so HLO size stays O(pattern), not
+O(layers), at 512-way SPMD.
+
+Modes:
+- train   : full-sequence forward, all-position logits (for the loss).
+- prefill : full-sequence forward, last-position logits + caches.
+- decode  : one token per call against the caches.
+
+Caches are pytrees stacked over the scan dimension.  "No cache" is the
+empty dict (scan-friendly).
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.distributed.flash_decode import flash_decode
+from repro.distributed.sharding import constrain, dp_axes
+from repro.models import layers as L
+from repro.models import moe as moe_mod
+from repro.models import rglru as rglru_mod
+from repro.models import rwkv6 as rwkv_mod
+
+
+# ---------------------------------------------------------------------------
+# structure
+# ---------------------------------------------------------------------------
+
+def layer_pattern(cfg: ModelConfig) -> tuple[str, ...]:
+    return (cfg.block_pattern * cfg.n_layers)[: cfg.n_layers]
+
+
+def scan_groups(cfg: ModelConfig) -> list[tuple[tuple[str, ...], int]]:
+    """[(pattern, repeat)] — full periods then the remainder tail."""
+    period = len(cfg.block_pattern)
+    n_full, rem = divmod(cfg.n_layers, period)
+    groups = []
+    if n_full:
+        groups.append((tuple(cfg.block_pattern), n_full))
+    if rem:
+        groups.append((tuple(cfg.block_pattern[:rem]), 1))
+    return groups
+
+
+# ---------------------------------------------------------------------------
+# parameter shapes (value = (shape, logical_axes))
+# ---------------------------------------------------------------------------
+
+def _attn_shapes(cfg: ModelConfig):
+    D, dh, KV = cfg.d_model, cfg.d_head, cfg.padded_kv
+    H = cfg.padded_heads
+    s = {
+        "ln1": ((D,), ("norm",)),
+        "ln2": ((D,), ("norm",)),
+        "wq": ((D, H, dh), ("attn_din", "qheads", "head_dim")),
+        "wk": ((D, KV, dh), ("attn_din", "kv_heads", "head_dim")),
+        "wv": ((D, KV, dh), ("attn_din", "kv_heads", "head_dim")),
+        "wo": ((H, dh, D), ("qheads", "head_dim", "attn_dout")),
+    }
+    if cfg.qkv_bias:
+        s["bq"] = ((H, dh), ("qheads", "head_dim"))
+        s["bk"] = ((KV, dh), ("kv_heads", "head_dim"))
+        s["bv"] = ((KV, dh), ("kv_heads", "head_dim"))
+    if cfg.qk_norm:
+        s["qnorm"] = ((dh,), ("norm",))
+        s["knorm"] = ((dh,), ("norm",))
+    s.update(_mlp_shapes(cfg))
+    return s
+
+
+def _mlp_shapes(cfg: ModelConfig):
+    D, F = cfg.d_model, cfg.d_ff
+    if cfg.moe is not None:
+        return {k: v for k, v in moe_mod.moe_param_shapes(D, F, cfg.moe).items()}
+    if cfg.mlp in ("swiglu", "geglu"):
+        return {
+            "w_gate": ((D, F), ("d_model_in", "ff")),
+            "w_up": ((D, F), ("d_model_in", "ff")),
+            "w_down": ((F, D), ("ff", "d_model_out")),
+        }
+    return {  # gelu
+        "w_in": ((D, F), ("d_model_in", "ff")),
+        "b_in": ((F,), ("ff",)),
+        "w_out": ((F, D), ("ff", "d_model_out")),
+        "b_out": ((D,), ("norm",)),
+    }
+
+
+def _rglru_shapes(cfg: ModelConfig):
+    s = {"ln1": ((cfg.d_model,), ("norm",)),
+         "ln2": ((cfg.d_model,), ("norm",))}
+    s.update(rglru_mod.rglru_param_shapes(cfg.d_model, cfg.d_rnn or cfg.d_model))
+    # recurrent blocks pair with the same MLP as attention blocks
+    s.update(_mlp_shapes(cfg))
+    return s
+
+
+def _rwkv_shapes(cfg: ModelConfig):
+    s = {"ln1": ((cfg.d_model,), ("norm",)),
+         "ln2": ((cfg.d_model,), ("norm",))}
+    s.update(rwkv_mod.rwkv_param_shapes(cfg.d_model, cfg.d_ff))
+    return s
+
+
+_BLOCK_SHAPES = {"attn": _attn_shapes, "rglru": _rglru_shapes, "rwkv": _rwkv_shapes}
+
+
+def param_shapes(cfg: ModelConfig):
+    """Full logical parameter tree: {name: (shape, logical_axes)}."""
+    tree: dict[str, Any] = {
+        "embed": ((cfg.padded_vocab, cfg.d_model), ("vocab", "embed_d")),
+        "final_norm": ((cfg.d_model,), ("norm",)),
+    }
+    if not cfg.tie_embeddings:
+        tree["lm_head"] = ((cfg.padded_vocab, cfg.d_model),
+                           ("vocab", "embed_d"))
+    blocks = []
+    for pattern, repeat in scan_groups(cfg):
+        grp = {}
+        for pi, kind in enumerate(pattern):
+            shapes = _BLOCK_SHAPES[kind](cfg)
+            grp[str(pi)] = {
+                k: ((repeat,) + shp, ("layers",) + axes)
+                for k, (shp, axes) in shapes.items()
+            }
+        blocks.append(grp)
+    tree["blocks"] = blocks
+    return tree
+
+
+def logical_axes_tree(cfg: ModelConfig):
+    return jax.tree.map(lambda sa: sa[1], param_shapes(cfg),
+                        is_leaf=lambda x: isinstance(x, tuple) and len(x) == 2
+                        and isinstance(x[0], tuple))
+
+
+def init_params(cfg: ModelConfig, key: jax.Array, dtype=jnp.float32):
+    shapes = param_shapes(cfg)
+    leaves, treedef = jax.tree.flatten(
+        shapes, is_leaf=lambda x: isinstance(x, tuple) and len(x) == 2
+        and isinstance(x[0], tuple))
+    keys = jax.random.split(key, len(leaves))
+
+    def make(k, leaf):
+        shape, axes = leaf
+        fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+        scale = 1.0 / math.sqrt(max(fan_in, 1))
+        return (jax.random.normal(k, shape, jnp.float32) * scale).astype(dtype)
+
+    arrs = [make(k, lf) for k, lf in zip(keys, leaves)]
+    params = jax.tree.unflatten(treedef, arrs)
+
+    # targeted re-inits for special leaves (norm scales zero, decays, biases)
+    def fix(path, arr):
+        name = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
+        if name in ("ln1", "ln2", "final_norm", "qnorm", "knorm", "ln_w",
+                    "b_in", "b_out", "bq", "bk", "bv", "ln_b"):
+            return jnp.zeros_like(arr)
+        if name.startswith("mu_"):
+            return jnp.full_like(arr, 0.5)
+        if name == "w0":
+            return jnp.full_like(arr, -6.0)
+        if name == "u":
+            return jnp.zeros_like(arr)
+        if name == "lam":
+            k = jax.random.fold_in(key, hash(name) % (1 << 30))
+            un = jax.random.uniform(k, arr.shape, jnp.float32, 0.9, 0.999)
+            a = -jnp.log(un) / rglru_mod.C_SCALE
+            return jnp.log(jnp.expm1(jnp.maximum(a, 1e-6))).astype(arr.dtype)
+        return arr
+    params = jax.tree_util.tree_map_with_path(fix, params)
+
+    # zero the padded head slices so padding is exact identity
+    if cfg.padded_heads != cfg.n_heads:
+        hmask = (jnp.arange(cfg.padded_heads) < cfg.n_heads).astype(dtype)
+        def zero_pad(path, arr):
+            name = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
+            if name in ("wq", "bq"):
+                return arr * hmask[..., :, None].astype(arr.dtype)
+            if name == "wo":
+                return arr * hmask[..., :, None, None].astype(arr.dtype)
+            return arr
+        params = jax.tree_util.tree_map_with_path(zero_pad, params)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# caches
+# ---------------------------------------------------------------------------
+
+def _block_cache_shape(cfg: ModelConfig, kind: str, batch: int, smax: int,
+                       dtype):
+    D, dh, KV = cfg.d_model, cfg.d_head, cfg.padded_kv
+    if kind == "attn":
+        w = cfg.sliding_window
+        slots = min(w, smax) if w else smax
+        c = {"k": jnp.zeros((batch, slots, KV, dh), dtype),
+             "v": jnp.zeros((batch, slots, KV, dh), dtype)}
+        if w:
+            c["pos"] = jnp.full((batch, slots), -1, jnp.int32)
+        return c
+    if kind == "rglru":
+        R = cfg.d_rnn or D
+        return {"conv": jnp.zeros((batch, 3, R), dtype),
+                "h": jnp.zeros((batch, R), jnp.float32)}
+    if kind == "rwkv":
+        H = D // rwkv_mod.HEAD_DIM
+        return {"s": jnp.zeros((batch, H, rwkv_mod.HEAD_DIM, rwkv_mod.HEAD_DIM),
+                               jnp.float32),
+                "x_prev_t": jnp.zeros((batch, D), dtype),
+                "x_prev_c": jnp.zeros((batch, D), dtype)}
+    raise ValueError(kind)
+
+
+def init_cache(cfg: ModelConfig, batch: int, smax: int, dtype=jnp.bfloat16,
+               stacked: bool = True):
+    """``stacked=True``: leaves carry a leading layer dim (scan layout,
+    produced by prefill).  ``stacked=False``: one subtree per layer (decode
+    layout — donation then aliases every per-layer buffer in place, where a
+    stacked buffer chain defeats XLA aliasing and doubles cache memory)."""
+    groups = []
+    for pattern, repeat in scan_groups(cfg):
+        if stacked:
+            grp = {}
+            for pi, kind in enumerate(pattern):
+                one = _block_cache_shape(cfg, kind, batch, smax, dtype)
+                grp[str(pi)] = jax.tree.map(
+                    lambda a: jnp.broadcast_to(a[None], (repeat,) + a.shape),
+                    one)
+            groups.append(grp)
+        else:
+            groups.append([
+                {str(pi): _block_cache_shape(cfg, kind, batch, smax, dtype)
+                 for pi, kind in enumerate(pattern)}
+                for _ in range(repeat)])
+    return {"blocks": groups}
+
+
+def unstack_cache(cfg: ModelConfig, cache):
+    """Stacked (prefill) cache -> per-layer (decode) layout."""
+    groups = []
+    for gi, (pattern, repeat) in enumerate(scan_groups(cfg)):
+        gc = cache["blocks"][gi]
+        groups.append([
+            jax.tree.map(lambda a: a[li], gc) for li in range(repeat)])
+    return {"blocks": groups}
+
+
+# ---------------------------------------------------------------------------
+# block forwards
+# ---------------------------------------------------------------------------
+
+def _mlp_forward(cfg: ModelConfig, p, x, mesh, mode="train"):
+    if cfg.moe is not None:
+        fsdp = (mode == "train" and mesh is not None
+                and "data" in mesh.axis_names)
+        return moe_mod.moe_ffn(p, x, cfg.moe, mesh=mesh, fsdp_gather=fsdp)
+    if cfg.mlp == "swiglu":
+        return L.swiglu_mlp(x, p["w_gate"].astype(x.dtype),
+                            p["w_up"].astype(x.dtype),
+                            p["w_down"].astype(x.dtype))
+    if cfg.mlp == "geglu":
+        return L.geglu_mlp(x, p["w_gate"].astype(x.dtype),
+                           p["w_up"].astype(x.dtype),
+                           p["w_down"].astype(x.dtype))
+    return L.gelu_mlp(x, p["w_in"].astype(x.dtype), p["b_in"].astype(x.dtype),
+                      p["w_out"].astype(x.dtype), p["b_out"].astype(x.dtype))
+
+
+def _attn_forward(cfg, p, x, positions, cache, *, mode, mesh, lengths,
+                  serve_seq_shard, causal_skip, chunk_q, chunk_kv):
+    B, S, D = x.shape
+    dt = x.dtype
+    xn = L.rms_norm(x, p["ln1"], cfg.norm_eps)
+    q = jnp.einsum("bsd,dhe->bshe", xn, p["wq"].astype(dt))
+    k = jnp.einsum("bsd,dke->bske", xn, p["wk"].astype(dt))
+    v = jnp.einsum("bsd,dke->bske", xn, p["wv"].astype(dt))
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(dt)
+        k = k + p["bk"].astype(dt)
+        v = v + p["bv"].astype(dt)
+    if cfg.qk_norm:
+        q = L.rms_norm(q, p["qnorm"], cfg.norm_eps)
+        k = L.rms_norm(k, p["knorm"], cfg.norm_eps)
+    if cfg.pos_emb == "rope":
+        q = L.rope(q, positions, cfg.rope_theta)
+        k = L.rope(k, positions, cfg.rope_theta)
+
+    window = cfg.sliding_window
+    new_cache = {}
+    if mode in ("train", "prefill"):
+        if mesh is not None and "model" in mesh.axis_names \
+                and cfg.padded_heads % mesh.shape["model"] == 0:
+            # keep q/k/v head-sharded through the attention math — the
+            # serve policy replicates projection weights, and without this
+            # constraint a 32k prefill materializes multi-GiB full-head
+            # q/k/v per device
+            dpn = 1
+            for a in dp_axes(mesh):
+                dpn *= mesh.shape[a]
+            dpx = dp_axes(mesh) if q.shape[0] % max(dpn, 1) == 0 else None
+            q = constrain(q, mesh, dpx, None, "model", None)
+            if cfg.padded_kv % mesh.shape["model"] == 0:
+                k = constrain(k, mesh, dpx, None, "model", None)
+                v = constrain(v, mesh, dpx, None, "model", None)
+        if S <= max(chunk_q, 256):
+            out = L.attention_full(q, k, v, causal=True, window=window)
+        else:
+            out = L.attention_chunked(
+                q, k, v, causal=True, window=window,
+                chunk_q=chunk_q, chunk_kv=chunk_kv, causal_skip=causal_skip)
+        if mode == "prefill":
+            if window:
+                # ring-buffer invariant: global position p lives in slot
+                # p % slots, so later decode writes replace the oldest entry
+                slots = min(window, S)
+                shift = S % slots
+                new_cache = {
+                    "k": jnp.roll(k[:, -slots:], shift, axis=1),
+                    "v": jnp.roll(v[:, -slots:], shift, axis=1),
+                    "pos": jnp.roll(positions[:, -slots:].astype(jnp.int32),
+                                    shift, axis=1),
+                }
+            else:
+                new_cache = {"k": k, "v": v}
+    else:  # decode: S == 1
+        kc, vc = cache["k"].astype(dt), cache["v"].astype(dt)
+        slots = kc.shape[1]
+        bidx = jnp.arange(B)
+        if window:
+            slot = (lengths % slots).astype(jnp.int32)
+            kc = kc.at[bidx, slot].set(k[:, 0].astype(kc.dtype))
+            vc = vc.at[bidx, slot].set(v[:, 0].astype(vc.dtype))
+            posbuf = cache["pos"].at[bidx, slot].set(lengths.astype(jnp.int32))
+            new_cache = {"k": kc, "v": vc, "pos": posbuf}
+            out1 = _decode_ring(q[:, 0], kc, vc, posbuf, lengths)
+        elif mesh is None:
+            bidx2 = jnp.arange(B)
+            kc = kc.at[bidx2, lengths].set(k[:, 0].astype(kc.dtype))
+            vc = vc.at[bidx2, lengths].set(v[:, 0].astype(vc.dtype))
+            new_cache = {"k": kc, "v": vc}
+            out1 = L.attention_decode(q[:, 0], kc, vc, lengths + 1)
+        else:
+            # fused cache-write + attention in ONE shard_map region: a
+            # GSPMD dynamic scatter would replicate the whole cache, and
+            # separate regions each materialize a cache copy per layer
+            from repro.distributed.flash_decode import flash_decode_update
+            tp_ok = "model" in mesh.axis_names
+            seq_axis = "model" if (serve_seq_shard and tp_ok) else None
+            kv_axis = ("model" if (tp_ok and not serve_seq_shard and
+                                   cfg.padded_kv % mesh.shape["model"] == 0)
+                       else None)
+            axes = dp_axes(mesh)
+            n = 1
+            for a in axes:
+                n *= mesh.shape[a]
+            dpd = axes if (axes and B % n == 0) else None
+            out1, kc, vc = flash_decode_update(
+                q[:, 0], kc, vc, k[:, 0], v[:, 0], lengths,
+                mesh=mesh, dp=dpd, seq_axis=seq_axis, kv_axis=kv_axis)
+            new_cache = {"k": kc, "v": vc}
+        out = out1[:, None]
+
+    o = jnp.einsum("bshe,hed->bsd", out, p["wo"].astype(dt))
+    x = x + o
+    xn2 = L.rms_norm(x, p["ln2"], cfg.norm_eps)
+    return x + _mlp_forward(cfg, p, xn2, mesh, mode), new_cache
+
+
+def _decode_ring(q, kc, vc, posbuf, lengths):
+    """Decode attention over a ring (sliding-window) cache with explicit
+    per-slot global positions."""
+    b, h, dh = q.shape
+    kv = kc.shape[2]
+    qg = q.reshape(b, kv, h // kv, dh)
+    sc = jnp.einsum("bkgd,btkd->bkgt", qg, kc,
+                    preferred_element_type=jnp.float32) * (dh ** -0.5)
+    msk = (posbuf >= 0) & (posbuf <= lengths[:, None])
+    sc = jnp.where(msk[:, None, None, :], sc, L.NEG_INF)
+    pr = jax.nn.softmax(sc, axis=-1)
+    out = jnp.einsum("bkgt,btkd->bkgd", pr.astype(vc.dtype), vc)
+    return out.reshape(b, h, dh)
+
+
+def _rglru_forward(cfg, p, x, positions, cache, *, mode, mesh, lengths, **_):
+    xn = L.rms_norm(x, p["ln1"], cfg.norm_eps)
+    branch_cache = None if mode in ("train", "prefill") else \
+        {"conv": cache["conv"], "h": cache["h"]}
+    y, nc = rglru_mod.recurrent_branch(
+        {k: p[k] for k in ("w_in_rnn", "w_in_gate", "conv", "w_a", "w_x",
+                           "lam", "w_out")},
+        xn, cache=branch_cache)
+    x = x + y
+    xn2 = L.rms_norm(x, p["ln2"], cfg.norm_eps)
+    x = x + _mlp_forward(cfg, p, xn2, mesh, mode)
+    new_cache = nc if mode in ("prefill", "decode") else {}
+    return x, new_cache
+
+
+def _rwkv_forward(cfg, p, x, positions, cache, *, mode, mesh, lengths, **_):
+    xn = L.rms_norm(x, p["ln1"], cfg.norm_eps)
+    tcache = None if mode in ("train", "prefill") else \
+        {"s": cache["s"], "x_prev": cache["x_prev_t"]}
+    y, ntc = rwkv_mod.time_mix(p, xn, cache=tcache)
+    x = x + y
+    xn2 = L.rms_norm(x, p["ln2"], cfg.norm_eps)
+    ccache = None if mode in ("train", "prefill") else \
+        {"x_prev": cache["x_prev_c"]}
+    y2, ncc = rwkv_mod.channel_mix(p, xn2, cache=ccache)
+    x = x + y2
+    if mode == "train":
+        return x, {}
+    return x, {"s": ntc["s"], "x_prev_t": ntc["x_prev"],
+               "x_prev_c": ncc["x_prev"]}
+
+
+_BLOCK_FWD = {"attn": _attn_forward, "rglru": _rglru_forward,
+              "rwkv": _rwkv_forward}
+
+
+# ---------------------------------------------------------------------------
+# full forward
+# ---------------------------------------------------------------------------
+
+def forward(
+    cfg: ModelConfig,
+    params,
+    batch: dict,
+    *,
+    mode: str,                    # train | prefill | decode
+    mesh=None,
+    cache=None,
+    lengths: Optional[jax.Array] = None,
+    remat: bool = True,
+    causal_skip: bool = False,
+    chunk_q: int = 512,
+    chunk_kv: int = 512,
+    serve_seq_shard: bool = False,
+    compute_dtype=jnp.bfloat16,
+    return_hidden: bool = False,
+):
+    """Returns (logits, new_cache).  logits: [B, S, V] for train,
+    [B, 1, V] for prefill (last position) and decode.
+    ``return_hidden`` skips the output projection and returns the final
+    hidden states instead (used by the fused chunked loss)."""
+    dp = dp_axes(mesh) if mesh is not None else None
+
+    if "embeds" in batch:
+        x = batch["embeds"].astype(compute_dtype)
+        B, S = x.shape[:2]
+    else:
+        tokens = batch["tokens"]
+        B, S = tokens.shape
+        x = jnp.take(params["embed"], tokens, axis=0).astype(compute_dtype)
+    if mesh is not None:
+        x = constrain(x, mesh, dp, None, None)
+
+    if mode == "decode":
+        assert lengths is not None
+        positions = lengths[:, None]
+    else:
+        positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    if cfg.pos_emb == "sinusoidal":
+        x = x + L.sinusoidal_positions(positions, cfg.d_model).astype(x.dtype)
+
+    new_groups = []
+    for gi, (pattern, repeat) in enumerate(scan_groups(cfg)):
+        gp = params["blocks"][gi]
+        gc = cache["blocks"][gi] if cache is not None else {
+            k: {} for k in gp}
+
+        # sequence parallelism on the residual stream (Megatron-SP): the
+        # inter-block x is sharded over "model" on the sequence dim, so the
+        # remat-saved per-layer carries shrink by tp (8.8 GiB -> 0.55 GiB
+        # for mistral-large train) and the TP all-reduce splits into
+        # reduce-scatter + all-gather (same wire bytes).
+        seq_shard = (mesh is not None and "model" in mesh.axis_names
+                     and mode in ("train", "prefill")
+                     and x.shape[1] % mesh.shape["model"] == 0)
+
+        def body(xc, per_layer, pattern=pattern):
+            lp, lc = per_layer
+            newc = {}
+            for pi, kind in enumerate(pattern):
+                xc, nc = _BLOCK_FWD[kind](
+                    cfg, lp[str(pi)], xc, positions,
+                    lc.get(str(pi)) or None,
+                    mode=mode, mesh=mesh, lengths=lengths,
+                    serve_seq_shard=serve_seq_shard,
+                    causal_skip=causal_skip,
+                    chunk_q=chunk_q, chunk_kv=chunk_kv)
+                if mesh is not None:
+                    xc = constrain(xc, mesh, dp,
+                                   "model" if seq_shard else None, None)
+                newc[str(pi)] = nc
+            return xc, newc
+
+        if mode == "decode":
+            # unrolled layer loop: a scan would double-buffer the cache in
+            # its xs/ys (tens of GiB/device for 32k decode)
+            if isinstance(gc, (list, tuple)):
+                # per-layer cache layout: each layer's buffers are separate
+                # (donated) arrays, aliased in place by XLA
+                newc = []
+                for li in range(repeat):
+                    lp = jax.tree.map(lambda a: lax.index_in_dim(
+                        a, li, 0, keepdims=False), gp)
+                    x, nc = body(x, (lp, gc[li]))
+                    newc.append(nc)
+                new_groups.append(newc)
+                continue
+            # stacked layout (CPU/smoke path)
+            newc = gc
+            for li in range(repeat):
+                lp = jax.tree.map(lambda a: lax.index_in_dim(
+                    a, li, 0, keepdims=False), gp)
+                lc = jax.tree.map(lambda a: lax.index_in_dim(
+                    a, li, 0, keepdims=False), newc)
+                x, nc = body(x, (lp, lc))
+                newc = jax.tree.map(
+                    lambda buf, new: lax.dynamic_update_index_in_dim(
+                        buf, new.astype(buf.dtype), li, 0), newc, nc)
+            new_groups.append(newc)
+            continue
+
+        if remat and mode == "train":
+            body = jax.checkpoint(body)
+        x, newc = lax.scan(body, x, (gp, gc))
+        new_groups.append(newc)
+
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    if mode == "prefill":
+        x = x[:, -1:]
+    if return_hidden:
+        return x, {"blocks": new_groups}
+    head = params.get("lm_head", params["embed"])
+    logits = jnp.einsum("bsd,vd->bsv", x, head.astype(x.dtype))
+    if mesh is not None:
+        from repro.distributed.sharding import vocab_axis
+        logits = constrain(logits, mesh, dp, None, vocab_axis(dp))
+    return logits, {"blocks": new_groups}

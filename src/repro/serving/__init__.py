@@ -1,0 +1,5 @@
+"""Serving: batched prefill/decode engine with continuous batching slots."""
+
+from repro.serving.engine import ServeEngine, Request
+
+__all__ = ["ServeEngine", "Request"]

@@ -1,0 +1,91 @@
+"""Batched serving engine: slot-based continuous batching over one shared
+KV cache.
+
+The engine owns a fixed batch of ``n_slots`` sequences.  Requests queue up;
+free slots are prefix-filled one request at a time (prefill writes that
+slot's cache rows), then all active slots decode in lockstep — the standard
+static-batch serving loop, with per-slot lengths so ragged sequences are
+handled by masking rather than padding-restarts.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import lm as lm_mod
+from repro.models import transformer as T
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray            # [S0] int32
+    max_new_tokens: int
+    out: Optional[list] = None
+    done: bool = False
+
+
+class ServeEngine:
+    def __init__(self, cfg: ModelConfig, params, *, n_slots: int = 4,
+                 max_seq: int = 512, mesh=None, serve_seq_shard=False):
+        self.cfg = cfg
+        self.params = params
+        self.n_slots = n_slots
+        self.max_seq = max_seq
+        self.mesh = mesh
+        self.cache = T.init_cache(cfg, n_slots, max_seq, jnp.float32)
+        self.lengths = jnp.zeros((n_slots,), jnp.int32)
+        self.slot_req: List[Optional[Request]] = [None] * n_slots
+        self.pending: List[Request] = []
+        self._decode = jax.jit(lm_mod.make_decode_step(
+            cfg, mesh=mesh, serve_seq_shard=serve_seq_shard))
+        self.last_tok = jnp.zeros((n_slots,), jnp.int32)
+
+    def submit(self, req: Request):
+        req.out = []
+        self.pending.append(req)
+
+    def _admit(self):
+        """Prefill pending requests into free slots (token-by-token prefill
+        through the decode path keeps one compiled program; a bulk-prefill
+        fast path exists in launch/serve.py)."""
+        for slot in range(self.n_slots):
+            if self.slot_req[slot] is None and self.pending:
+                req = self.pending.pop(0)
+                self.slot_req[slot] = req
+                for t in np.asarray(req.prompt, np.int32):
+                    tok = self.last_tok.at[slot].set(int(t))
+                    nxt, self.cache, lens = self._decode(
+                        self.params, self.cache, tok, self.lengths)
+                    self.lengths = self.lengths.at[slot].set(
+                        int(self.lengths[slot]) + 1)
+                    self.last_tok = self.last_tok.at[slot].set(
+                        int(np.asarray(nxt)[slot]))
+
+    def step(self):
+        """One decode step for all active slots; retire finished requests."""
+        self._admit()
+        active = [s for s, r in enumerate(self.slot_req) if r is not None]
+        if not active:
+            return False
+        nxt, self.cache, self.lengths = self._decode(
+            self.params, self.cache, self.last_tok, self.lengths)
+        nxt_np = np.asarray(nxt)
+        for s in active:
+            req = self.slot_req[s]
+            req.out.append(int(nxt_np[s]))
+            if len(req.out) >= req.max_new_tokens:
+                req.done = True
+                self.slot_req[s] = None
+                self.lengths = self.lengths.at[s].set(0)
+        self.last_tok = nxt
+        return True
+
+    def run(self):
+        while self.pending or any(r is not None for r in self.slot_req):
+            self.step()

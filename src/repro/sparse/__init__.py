@@ -1,0 +1,36 @@
+"""Sparse-matrix substrate for cuMF-on-TPU.
+
+The paper stores R in CSR and relies on GPU texture caches to make random
+column gathers cheap.  TPUs want contiguous tile traffic, so this package
+provides:
+
+- :class:`PaddedELL` — rows padded to a common nnz budget K (cuMF's *bin*
+  concept applied at the data-layout level).  The gather of rated feature
+  columns happens as one XLA gather (TPU DMA-gather), after which all kernel
+  traffic is dense tiles.
+- partitioners that produce the per-device shards consumed by SU-ALS
+  (column shards over the "model" axis == cuMF's p, row shards over the
+  "data" axis == cuMF's q).
+- synthetic data generators reproducing the scale recipes of the paper's
+  data sets (Netflix / YahooMusic / Hugewiki / SparkALS / Factorbird /
+  Facebook).
+"""
+
+from repro.sparse.padded import PaddedELL, pad_csr, csr_from_coo, partition_padded
+from repro.sparse.synth import (
+    SynthSpec,
+    DATASETS,
+    make_synthetic_ratings,
+    make_rating_batches,
+)
+
+__all__ = [
+    "PaddedELL",
+    "pad_csr",
+    "csr_from_coo",
+    "partition_padded",
+    "SynthSpec",
+    "DATASETS",
+    "make_synthetic_ratings",
+    "make_rating_batches",
+]

@@ -1,0 +1,163 @@
+"""Padded-ELL sparse layout (TPU-native replacement for cuMF's CSR+texture).
+
+A sparse rating matrix R (m x n, Nz nonzeros) is stored as three dense
+arrays::
+
+    idx  [m, K] int32   column index of each nonzero, rows padded to K
+    val  [m, K] float32 rating value, 0 in padding slots
+    cnt  [m]    int32   true nnz per row (n_{x_u} of the paper, used by the
+                        weighted-lambda regularizer)
+
+Padding slots carry ``idx = 0`` and ``val = 0`` and are additionally masked
+by position >= cnt, so gathered garbage never contributes.  K is chosen per
+row *bucket* (rows sorted by degree, cuMF's binning made static) so the
+padding overhead on power-law data stays bounded; the single-K variant is
+what the jitted kernels consume.
+
+Everything here is host-side preprocessing (numpy) + a few jnp helpers; the
+hot path lives in repro/kernels.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class PaddedELL:
+    """Dense-padded sparse matrix, row-major semantics R[u, idx[u, k]] = val[u, k]."""
+
+    idx: np.ndarray  # [m, K] int32
+    val: np.ndarray  # [m, K] float32
+    cnt: np.ndarray  # [m]    int32
+    n_cols: int      # n — number of columns of the logical matrix
+
+    @property
+    def m(self) -> int:
+        return self.idx.shape[0]
+
+    @property
+    def K(self) -> int:
+        return self.idx.shape[1]
+
+    @property
+    def nnz(self) -> int:
+        return int(self.cnt.sum())
+
+    @property
+    def fill(self) -> float:
+        """Padding overhead: stored slots / true nonzeros (>= 1)."""
+        nnz = self.nnz
+        return float(self.m * self.K) / max(nnz, 1)
+
+    def mask(self) -> np.ndarray:
+        """[m, K] float32 1.0 where a slot holds a real nonzero."""
+        k = np.arange(self.K, dtype=np.int32)[None, :]
+        return (k < self.cnt[:, None]).astype(np.float32)
+
+    def transpose_coo(self) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """Return (rows, cols, vals) of R^T — used to build the update-Theta side."""
+        k = np.arange(self.K, dtype=np.int32)[None, :]
+        live = k < self.cnt[:, None]
+        rows = np.broadcast_to(np.arange(self.m, dtype=np.int64)[:, None], self.idx.shape)[live]
+        cols = self.idx[live].astype(np.int64)
+        vals = self.val[live]
+        return cols, rows, vals  # transposed: col becomes row
+
+
+def csr_from_coo(rows: np.ndarray, cols: np.ndarray, vals: np.ndarray,
+                 m: int) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Sort COO by row; return (row_ptr, cols, vals) CSR triplet."""
+    order = np.argsort(rows, kind="stable")
+    rows, cols, vals = rows[order], cols[order], vals[order]
+    cnt = np.bincount(rows, minlength=m).astype(np.int64)
+    ptr = np.zeros(m + 1, dtype=np.int64)
+    np.cumsum(cnt, out=ptr[1:])
+    return ptr, cols.astype(np.int32), vals.astype(np.float32)
+
+
+def pad_csr(ptr: np.ndarray, cols: np.ndarray, vals: np.ndarray,
+            n_cols: int, k_multiple: int = 8, k_cap: int | None = None) -> PaddedELL:
+    """CSR -> PaddedELL.  K = max row degree rounded up to ``k_multiple``.
+
+    ``k_cap`` optionally truncates pathological rows (keeps the first k_cap
+    ratings); the dropped tail is reported by the caller via fill/cnt deltas.
+    """
+    m = ptr.shape[0] - 1
+    cnt = (ptr[1:] - ptr[:-1]).astype(np.int32)
+    if k_cap is not None:
+        cnt = np.minimum(cnt, np.int32(k_cap))
+    kmax = int(cnt.max()) if m else 0
+    K = max(k_multiple, -(-kmax // k_multiple) * k_multiple)
+    idx = np.zeros((m, K), dtype=np.int32)
+    val = np.zeros((m, K), dtype=np.float32)
+    for u in range(m):  # host-side, one-time preprocessing
+        c = int(cnt[u])
+        lo = int(ptr[u])
+        idx[u, :c] = cols[lo:lo + c]
+        val[u, :c] = vals[lo:lo + c]
+    return PaddedELL(idx=idx, val=val, cnt=cnt, n_cols=n_cols)
+
+
+def pad_csr_fast(ptr: np.ndarray, cols: np.ndarray, vals: np.ndarray,
+                 n_cols: int, k_multiple: int = 8) -> PaddedELL:
+    """Vectorized pad_csr (no python loop) for large matrices."""
+    m = ptr.shape[0] - 1
+    cnt = (ptr[1:] - ptr[:-1]).astype(np.int32)
+    kmax = int(cnt.max()) if m else 0
+    K = max(k_multiple, -(-kmax // k_multiple) * k_multiple)
+    # position of each nonzero within its row
+    pos = np.arange(len(cols), dtype=np.int64) - np.repeat(ptr[:-1], cnt)
+    rows = np.repeat(np.arange(m, dtype=np.int64), cnt)
+    idx = np.zeros((m, K), dtype=np.int32)
+    val = np.zeros((m, K), dtype=np.float32)
+    idx[rows, pos] = cols
+    val[rows, pos] = vals
+    return PaddedELL(idx=idx, val=val, cnt=cnt, n_cols=n_cols)
+
+
+def partition_padded(ell: PaddedELL, p: int, k_multiple: int = 8) -> PaddedELL:
+    """Column-partition a PaddedELL into ``p`` shards (SU-ALS data parallelism).
+
+    Returns a PaddedELL whose arrays carry a leading shard axis:
+        idx [p, m, K_loc], val [p, m, K_loc], cnt [p, m]
+    Shard i holds the nonzeros with column in [i*n/p, (i+1)*n/p), with the
+    column index re-based to the shard-local coordinate — exactly eq. (5)-(7)
+    of the paper: each device observes only its local theta_v columns.
+    """
+    assert ell.n_cols % p == 0, f"n={ell.n_cols} not divisible by p={p}"
+    npp = ell.n_cols // p
+    m, K = ell.m, ell.K
+    live = ell.mask().astype(bool)
+    shard_of = ell.idx // npp          # [m, K] which shard owns each nonzero
+    local_col = ell.idx % npp
+    cnt_p = np.zeros((p, m), dtype=np.int32)
+    for i in range(p):
+        cnt_p[i] = ((shard_of == i) & live).sum(axis=1)
+    kmax = int(cnt_p.max()) if m else 0
+    K_loc = max(k_multiple, -(-kmax // k_multiple) * k_multiple)
+    idx_p = np.zeros((p, m, K_loc), dtype=np.int32)
+    val_p = np.zeros((p, m, K_loc), dtype=np.float32)
+    for i in range(p):
+        sel = (shard_of == i) & live                       # [m, K]
+        pos = np.cumsum(sel, axis=1) - 1                   # slot within shard row
+        uu, kk = np.nonzero(sel)
+        idx_p[i, uu, pos[uu, kk]] = local_col[uu, kk]
+        val_p[i, uu, pos[uu, kk]] = ell.val[uu, kk]
+    out = PaddedELL(idx=idx_p, val=val_p, cnt=cnt_p, n_cols=npp)
+    return out
+
+
+def row_partition(ell: PaddedELL, q: int) -> PaddedELL:
+    """Row-partition into q shards (SU-ALS model parallelism): arrays get a
+    leading q axis; rows must divide evenly (pad rows upstream)."""
+    assert ell.m % q == 0, f"m={ell.m} not divisible by q={q}"
+    mq = ell.m // q
+    return PaddedELL(
+        idx=ell.idx.reshape(q, mq, ell.K),
+        val=ell.val.reshape(q, mq, ell.K),
+        cnt=ell.cnt.reshape(q, mq),
+        n_cols=ell.n_cols,
+    )

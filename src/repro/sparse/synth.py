@@ -1,0 +1,129 @@
+"""Synthetic rating matrices at the paper's data-set scales.
+
+The paper evaluates on Netflix / YahooMusic / Hugewiki and synthesizes the
+SparkALS / Factorbird / Facebook scales (Table 5).  We reproduce the same
+recipe: draw a planted low-rank model X*, Theta*, sample Nz (user, item)
+pairs from a power-law item popularity (real rating matrices are heavily
+skewed), observe r_uv = x_u . theta_v + noise, and hold out a test split.
+
+A planted factorization gives us a *known* achievable RMSE, so convergence
+tests have an oracle, which public data would not give us offline.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Tuple
+
+import numpy as np
+
+from repro.sparse.padded import PaddedELL, csr_from_coo, pad_csr_fast
+
+
+@dataclasses.dataclass(frozen=True)
+class SynthSpec:
+    """Scale recipe for one paper data set (Table 5)."""
+
+    name: str
+    m: int              # rows (users)
+    n: int              # cols (items)
+    nnz: int            # number of ratings
+    f: int              # latent dimension used by the paper
+    lam: float          # lambda (weighted-lambda regularization)
+
+    @property
+    def bytes_R(self) -> int:
+        # CSR: 2*Nz + m + 1 fp32/int32 words (paper Table 3)
+        return 4 * (2 * self.nnz + self.m + 1)
+
+    @property
+    def bytes_factors(self) -> int:
+        return 4 * self.f * (self.m + self.n)
+
+    @property
+    def bytes_hermitian_all(self) -> int:
+        return 4 * self.m * self.f * self.f
+
+
+# Table 5 of the paper, verbatim.
+DATASETS: Dict[str, SynthSpec] = {
+    "netflix":    SynthSpec("netflix",    480_189,       17_770,    99_000_000,       100, 0.05),
+    "yahoomusic": SynthSpec("yahoomusic", 1_000_990,     624_961,   252_800_000,      100, 1.4),
+    "hugewiki":   SynthSpec("hugewiki",   50_082_603,    39_780,    3_100_000_000,    100, 0.05),
+    "sparkals":   SynthSpec("sparkals",   660_000_000,   2_400_000, 3_500_000_000,    10,  0.05),
+    "factorbird": SynthSpec("factorbird", 229_000_000,   195_000_000, 38_500_000_000, 5,   0.05),
+    "facebook":   SynthSpec("facebook",   1_000_000_000, 48_000_000, 112_000_000_000, 16,  0.05),
+    "cumf_max":   SynthSpec("cumf_max",   1_056_000_000, 48_000_000, 112_000_000_000, 100, 0.05),
+}
+
+
+def scaled(spec: SynthSpec, scale: float, f: int | None = None) -> SynthSpec:
+    """Shrink a recipe by ``scale`` in every dimension (CPU-fit testing)."""
+    return SynthSpec(
+        name=f"{spec.name}@{scale:g}",
+        m=max(16, int(spec.m * scale)),
+        n=max(16, int(spec.n * scale)),
+        nnz=max(64, int(spec.nnz * scale * scale)),
+        f=f if f is not None else spec.f,
+        lam=spec.lam,
+    )
+
+
+def _power_law_probs(n: int, alpha: float, rng: np.random.Generator) -> np.ndarray:
+    ranks = np.arange(1, n + 1, dtype=np.float64)
+    p = ranks ** (-alpha)
+    rng.shuffle(p)
+    return p / p.sum()
+
+
+def make_synthetic_ratings(
+    spec: SynthSpec,
+    seed: int = 0,
+    noise: float = 0.1,
+    alpha: float = 0.8,
+    test_frac: float = 0.1,
+    k_multiple: int = 8,
+) -> Tuple[PaddedELL, PaddedELL, np.ndarray, np.ndarray]:
+    """Return (R_train as PaddedELL rows=users, R_train^T as PaddedELL rows=items,
+    X*, Theta*) for a planted low-rank model.
+
+    Ratings are r_uv = <x*_u, theta*_v>/sqrt(f) + noise; users uniform, items
+    power-law(alpha) — the skew that motivates cuMF's degree-binning.
+    """
+    rng = np.random.default_rng(seed)
+    f = spec.f
+    x_star = rng.standard_normal((spec.m, f)).astype(np.float32)
+    t_star = rng.standard_normal((spec.n, f)).astype(np.float32)
+
+    rows = rng.integers(0, spec.m, size=spec.nnz, dtype=np.int64)
+    item_p = _power_law_probs(spec.n, alpha, rng)
+    cols = rng.choice(spec.n, size=spec.nnz, p=item_p).astype(np.int64)
+    # de-duplicate (u, v) pairs
+    key = rows * spec.n + cols
+    _, uniq = np.unique(key, return_index=True)
+    rows, cols = rows[uniq], cols[uniq]
+    vals = (
+        np.einsum("kf,kf->k", x_star[rows], t_star[cols]) / np.sqrt(f)
+        + noise * rng.standard_normal(len(rows))
+    ).astype(np.float32)
+
+    n_test = int(len(rows) * test_frac)
+    perm = rng.permutation(len(rows))
+    test_sel, train_sel = perm[:n_test], perm[n_test:]
+
+    def _build(r, c, v, m, n):
+        ptr, cc, vv = csr_from_coo(r, c, v, m)
+        return pad_csr_fast(ptr, cc, vv, n, k_multiple=k_multiple)
+
+    r_tr = _build(rows[train_sel], cols[train_sel], vals[train_sel], spec.m, spec.n)
+    r_tr_T = _build(cols[train_sel], rows[train_sel], vals[train_sel], spec.n, spec.m)
+    r_te = _build(rows[test_sel], cols[test_sel], vals[test_sel], spec.m, spec.n)
+    return r_tr, r_tr_T, r_te, (x_star, t_star)
+
+
+def make_rating_batches(ell: PaddedELL, batch_rows: int):
+    """Yield (row_offset, idx, val, cnt) batches of ``batch_rows`` rows —
+    cuMF's q-batching / out-of-core streaming unit."""
+    m = ell.m
+    for lo in range(0, m, batch_rows):
+        hi = min(lo + batch_rows, m)
+        yield lo, ell.idx[lo:hi], ell.val[lo:hi], ell.cnt[lo:hi]

@@ -1,0 +1,135 @@
+"""Optimizers (pytree-functional): AdamW and Adafactor.
+
+AdamW keeps two fp32 moments per parameter (the memory planner in
+DESIGN.md assumes 12 bytes/param + bf16 compute copy).  Adafactor factors
+the second moment of every rank>=2 parameter into row/col statistics —
+the memory option for >=100B-parameter training runs.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    name: str = "adamw"          # adamw | adafactor
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.0
+    grad_clip: float = 1.0
+
+
+class AdamState(NamedTuple):
+    m: Any
+    v: Any
+    step: jax.Array
+
+
+def adam_init(params) -> AdamState:
+    zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    return AdamState(m=zeros, v=jax.tree.map(jnp.copy, zeros),
+                     step=jnp.zeros((), jnp.int32))
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                        for g in jax.tree.leaves(tree)))
+
+
+def clip_by_global_norm(grads, max_norm):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale), grads), norm
+
+
+def adam_update(grads, state: AdamState, params, cfg: OptConfig):
+    grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip)
+    step = state.step + 1
+    b1c = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        m = cfg.b1 * m + (1 - cfg.b1) * g
+        v = cfg.b2 * v + (1 - cfg.b2) * jnp.square(g)
+        mhat = m / b1c
+        vhat = v / b2c
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        if cfg.weight_decay:
+            delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - cfg.lr * delta).astype(p.dtype), m, v
+
+    out = jax.tree.map(upd, params, grads, state.m, state.v)
+    new_params = jax.tree.map(lambda t: t[0], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_m = jax.tree.map(lambda t: t[1], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_v = jax.tree.map(lambda t: t[2], out, is_leaf=lambda x: isinstance(x, tuple))
+    return new_params, AdamState(m=new_m, v=new_v, step=step), gnorm
+
+
+# ---------------------------------------------------------------------------
+# Adafactor (factored second moments; memory option for 100B+ runs)
+# ---------------------------------------------------------------------------
+
+class AdafactorState(NamedTuple):
+    vr: Any     # row stats (rank>=2 leaves) or full v (rank<2)
+    vc: Any     # col stats (rank>=2) or None placeholder
+    step: jax.Array
+
+
+def _factored(p):
+    return p.ndim >= 2
+
+
+def adafactor_init(params) -> AdafactorState:
+    vr = jax.tree.map(
+        lambda p: jnp.zeros(p.shape[:-1], jnp.float32) if _factored(p)
+        else jnp.zeros(p.shape, jnp.float32), params)
+    vc = jax.tree.map(
+        lambda p: jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)
+        if _factored(p) else jnp.zeros((1,), jnp.float32), params)
+    return AdafactorState(vr=vr, vc=vc, step=jnp.zeros((), jnp.int32))
+
+
+def adafactor_update(grads, state: AdafactorState, params, cfg: OptConfig):
+    grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip)
+    step = state.step + 1
+    decay = 1.0 - (step.astype(jnp.float32) + 1.0) ** -0.8
+
+    def upd(p, g, vr, vc):
+        g2 = jnp.square(g) + 1e-30
+        if _factored(p):
+            vr = decay * vr + (1 - decay) * g2.mean(axis=-1)
+            vc = decay * vc + (1 - decay) * g2.mean(axis=-2)
+            r = vr / jnp.maximum(vr.mean(axis=-1, keepdims=True), 1e-30)
+            precond = jax.lax.rsqrt(
+                jnp.maximum(r[..., None] * vc[..., None, :], 1e-30))
+        else:
+            vr = decay * vr + (1 - decay) * g2
+            precond = jax.lax.rsqrt(jnp.maximum(vr, 1e-30))
+        delta = g * precond
+        # relative-scale clipping (Adafactor's d=1 update clipping)
+        rms = jnp.sqrt(jnp.mean(jnp.square(delta)) + 1e-30)
+        delta = delta / jnp.maximum(1.0, rms)
+        new_p = (p.astype(jnp.float32) - cfg.lr * delta)
+        if cfg.weight_decay:
+            new_p = new_p - cfg.lr * cfg.weight_decay * p.astype(jnp.float32)
+        return new_p.astype(p.dtype), vr, vc
+
+    out = jax.tree.map(upd, params, grads, state.vr, state.vc)
+    new_params = jax.tree.map(lambda t: t[0], out, is_leaf=lambda x: isinstance(x, tuple))
+    vr = jax.tree.map(lambda t: t[1], out, is_leaf=lambda x: isinstance(x, tuple))
+    vc = jax.tree.map(lambda t: t[2], out, is_leaf=lambda x: isinstance(x, tuple))
+    return new_params, AdafactorState(vr=vr, vc=vc, step=step), gnorm
+
+
+def make_optimizer(cfg: OptConfig):
+    if cfg.name == "adamw":
+        return adam_init, lambda g, s, p: adam_update(g, s, p, cfg)
+    if cfg.name == "adafactor":
+        return adafactor_init, lambda g, s, p: adafactor_update(g, s, p, cfg)
+    raise ValueError(cfg.name)

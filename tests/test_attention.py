@@ -1,0 +1,99 @@
+"""Attention math: chunked/online-softmax vs full oracle, windows, GQA,
+decode, ring cache — property-tested."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.models import layers as L
+
+
+def _qkv(seed, B, S, H, KV, dh):
+    rng = np.random.default_rng(seed)
+    q = jnp.asarray(rng.standard_normal((B, S, H, dh)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((B, S, KV, dh)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((B, S, KV, dh)), jnp.float32)
+    return q, k, v
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 99),
+       S=st.sampled_from([32, 64]),
+       H=st.sampled_from([4, 8]),
+       KV=st.sampled_from([1, 2, 4]),
+       cq=st.sampled_from([8, 16, 32]),
+       skip=st.booleans())
+def test_chunked_equals_full(seed, S, H, KV, cq, skip):
+    if H % KV:
+        H = KV * (H // KV or 1)
+    q, k, v = _qkv(seed, 2, S, H, KV, 8)
+    o_full = L.attention_full(q, k, v, causal=True)
+    o_chun = L.attention_chunked(q, k, v, causal=True, chunk_q=cq,
+                                 chunk_kv=cq, causal_skip=skip)
+    np.testing.assert_allclose(o_full, o_chun, atol=3e-5, rtol=3e-5)
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 99), window=st.sampled_from([8, 16, 24]))
+def test_window_chunked_equals_full(seed, window):
+    q, k, v = _qkv(seed, 2, 64, 4, 4, 8)
+    o_full = L.attention_full(q, k, v, causal=True, window=window)
+    o_chun = L.attention_chunked(q, k, v, causal=True, window=window,
+                                 chunk_q=16, chunk_kv=16, causal_skip=True)
+    np.testing.assert_allclose(o_full, o_chun, atol=3e-5, rtol=3e-5)
+
+
+def test_decode_equals_full_last_row():
+    q, k, v = _qkv(0, 2, 48, 8, 2, 16)
+    o_full = L.attention_full(q, k, v, causal=True)
+    Smax = 64
+    kc = jnp.pad(k, ((0, 0), (0, Smax - 48), (0, 0), (0, 0)))
+    vc = jnp.pad(v, ((0, 0), (0, Smax - 48), (0, 0), (0, 0)))
+    od = L.attention_decode(q[:, -1], kc, vc, jnp.full((2,), 48, jnp.int32))
+    np.testing.assert_allclose(o_full[:, -1], od, atol=3e-5)
+
+
+def test_decode_window_equals_full():
+    q, k, v = _qkv(1, 2, 48, 4, 1, 16)
+    o_full = L.attention_full(q, k, v, causal=True, window=16)
+    kc = jnp.pad(k, ((0, 0), (0, 16), (0, 0), (0, 0)))
+    vc = jnp.pad(v, ((0, 0), (0, 16), (0, 0), (0, 0)))
+    od = L.attention_decode(q[:, -1], kc, vc,
+                            jnp.full((2,), 48, jnp.int32), window=16)
+    np.testing.assert_allclose(o_full[:, -1], od, atol=3e-5)
+
+
+def test_ragged_lengths_decode():
+    """Per-row lengths mask correctly (continuous-batching requirement)."""
+    q, k, v = _qkv(2, 2, 32, 4, 2, 8)
+    lengths = jnp.asarray([10, 32], jnp.int32)
+    od = L.attention_decode(q[:, -1], k, v, lengths)
+    # row 0 must equal attention over only the first 10 positions
+    od0 = L.attention_decode(q[:1, -1], k[:1, :10], v[:1, :10],
+                             jnp.asarray([10], jnp.int32))
+    np.testing.assert_allclose(od[:1], od0, atol=3e-5)
+
+
+def test_rope_rotation_preserves_norm_and_relative():
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal((1, 8, 2, 16)), jnp.float32)
+    pos = jnp.arange(8)[None]
+    y = L.rope(x, pos, 10_000.0)
+    np.testing.assert_allclose(
+        jnp.linalg.norm(x, axis=-1), jnp.linalg.norm(y, axis=-1),
+        atol=1e-4, rtol=1e-4)
+    # relative property: <rope(q,i), rope(k,j)> depends only on i-j
+    q = jnp.asarray(rng.standard_normal((1, 1, 1, 16)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((1, 1, 1, 16)), jnp.float32)
+    def dot_at(i, j):
+        qi = L.rope(q, jnp.asarray([[i]]), 10_000.0)
+        kj = L.rope(k, jnp.asarray([[j]]), 10_000.0)
+        return float(jnp.sum(qi * kj))
+    assert abs(dot_at(5, 3) - dot_at(9, 7)) < 1e-3
+
+
+def test_sinusoidal_positions_shape():
+    e = L.sinusoidal_positions(jnp.arange(6)[None], 32)
+    assert e.shape == (1, 6, 32)
+    assert bool(jnp.isfinite(e).all())

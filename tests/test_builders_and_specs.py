@@ -1,0 +1,127 @@
+"""Cell builders, input specs, HLO parsers, planner — pure-spec tests (no
+multi-device work; everything here runs on the single CPU device)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import registry
+from repro.configs.base import SHAPES
+from repro.core.partition import plan_partitions
+from repro.distributed.collectives import collective_bytes_reduce
+from repro.launch.dryrun import parse_collectives
+from repro.models import transformer as T
+
+ARCHS = registry.list_archs()
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_input_specs_all_shapes(arch):
+    cfg = registry.get_arch(arch).model
+    for shape in SHAPES.values():
+        specs = registry.input_specs(cfg, shape)
+        if shape.kind in ("train", "prefill"):
+            key = "embeds" if cfg.frontend else "tokens"
+            assert key in specs
+            assert specs[key].shape[0] == shape.batch
+            assert specs[key].shape[1] == shape.seq
+            if shape.kind == "train":
+                assert specs["labels"].shape == (shape.batch, shape.seq)
+        else:
+            assert specs["lengths"].shape == (shape.batch,)
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_param_shapes_match_analytic_count(arch):
+    """Sum of parameter tensor sizes ~ the analytic params_count (within
+    head/vocab padding slack)."""
+    cfg = registry.get_arch(arch).model
+    shapes = T.param_shapes(cfg)
+    leaves = jax.tree.leaves(
+        shapes, is_leaf=lambda x: isinstance(x, tuple) and len(x) == 2
+        and isinstance(x[0], tuple))
+    total = sum(int(np.prod(s)) for s, _ in leaves)
+    analytic = cfg.params_count()
+    pad_slack = 1.0 + (cfg.padded_heads / cfg.n_heads - 1.0) + 0.05
+    assert analytic * 0.995 <= total <= analytic * pad_slack * 1.15, \
+        (arch, analytic, total)
+
+
+def test_skip_rules():
+    assert registry.get_arch("qwen3-4b").skip_reason(SHAPES["long_500k"])
+    assert registry.get_arch("rwkv6-7b").skip_reason(SHAPES["long_500k"]) is None
+    assert registry.get_arch("recurrentgemma-2b").skip_reason(
+        SHAPES["long_500k"]) is None
+    for a in ARCHS:
+        assert registry.get_arch(a).skip_reason(SHAPES["train_4k"]) is None
+
+
+def test_parse_collectives_wire_semantics():
+    hlo = """
+  %ag = bf16[16,128]{1,0} all-gather(bf16[1,128] %p), replica_groups=[16,16]<=[256], dimensions={0}
+  %ar = f32[64]{0} all-reduce(f32[64] %q), replica_groups={{0,1,2,3}}, to_apply=%add
+  %rs = f32[4,8]{1,0} reduce-scatter(f32[16,8] %r), replica_groups=[64,4]<=[256], dimensions={0}
+"""
+    out = parse_collectives(hlo)
+    assert out["count"] == {"all-gather": 1, "all-reduce": 1,
+                            "reduce-scatter": 1}
+    # all-gather: r*(g-1)/g with r=16*128*2, g=16
+    np.testing.assert_allclose(out["bytes"]["all-gather"],
+                               16 * 128 * 2 * 15 / 16)
+    # all-reduce: 2*r*(g-1)/g with r=64*4, g=4
+    np.testing.assert_allclose(out["bytes"]["all-reduce"],
+                               2 * 64 * 4 * 3 / 4)
+    # reduce-scatter: r*(g-1) with r=4*8*4, g=4
+    np.testing.assert_allclose(out["bytes"]["reduce-scatter"],
+                               4 * 8 * 4 * 3)
+
+
+def test_two_phase_reduction_saves_slow_link():
+    r = collective_bytes_reduce(1 << 30, p_fast=16, p_slow=2)
+    assert r["hierarchical"]["slow_link"] < r["flat"]["slow_link"] / 4
+    assert r["slow_link_saving"] == pytest.approx(8.0, rel=0.01)
+
+
+def test_planner_all_table5_fit_one_pod():
+    """Every Table-5 problem must have a feasible (p, q) plan on one pod."""
+    from repro.sparse.synth import DATASETS
+    for name, s in DATASETS.items():
+        plan = plan_partitions(s.m, s.n, s.nnz, s.f)
+        assert plan.fits, (name, plan.describe())
+
+
+def test_padded_vocab_divisible():
+    for a in ARCHS:
+        cfg = registry.get_arch(a).model
+        assert cfg.padded_vocab % 16 == 0
+        if cfg.vocab >= 1024:
+            assert cfg.padded_vocab % 256 == 0
+        assert cfg.padded_vocab >= cfg.vocab
+
+
+def test_padded_kv_preserves_gqa_grouping():
+    for a in ARCHS:
+        cfg = registry.get_arch(a).model
+        if cfg.attn_free:
+            continue
+        assert cfg.padded_heads % cfg.padded_kv == 0, a
+
+
+def test_cache_specs_layout():
+    cfg = registry.get_arch("qwen3-4b").model
+    shape = SHAPES["decode_32k"]
+    cache = registry.cache_specs(cfg, shape)
+    groups = cache["blocks"][0]
+    assert isinstance(groups, list) and len(groups) == cfg.n_layers
+    k = groups[0]["0"]["k"]
+    assert k.shape == (shape.batch, shape.seq, cfg.padded_kv, cfg.d_head)
+    stacked = registry.cache_specs(cfg, shape, stacked=True)
+    ks = stacked["blocks"][0]["0"]["k"]
+    assert ks.shape == (cfg.n_layers,) + k.shape
+
+
+def test_scan_groups_cover_all_layers():
+    for a in ARCHS:
+        cfg = registry.get_arch(a).model
+        total = sum(len(pat) * rep for pat, rep in T.scan_groups(cfg))
+        assert total == cfg.n_layers, a

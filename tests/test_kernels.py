@@ -1,0 +1,122 @@
+"""Per-kernel correctness: Pallas (interpret mode) vs pure-jnp oracles.
+
+Shape/dtype sweeps via hypothesis; every kernel asserts allclose against
+the ref.py oracle, per the repo contract.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops
+from repro.kernels import ref as kref
+from repro.kernels.batch_solve import batch_solve_pallas
+from repro.kernels.hermitian import fused_herm_pallas, herm_hbm_accum
+
+
+def _problem(seed, m, n, K, f, frac_empty=0.2):
+    rng = np.random.default_rng(seed)
+    theta = jnp.asarray(rng.standard_normal((n, f)), jnp.float32)
+    idx = jnp.asarray(rng.integers(0, n, (m, K)), jnp.int32)
+    cnt = jnp.asarray(
+        np.where(rng.random(m) < frac_empty, 0, rng.integers(0, K + 1, m)),
+        jnp.int32)
+    val = jnp.asarray(rng.standard_normal((m, K)), jnp.float32)
+    val = val * (jnp.arange(K)[None] < cnt[:, None])
+    return theta, idx, val, cnt
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    m=st.sampled_from([8, 16, 24]),
+    n=st.sampled_from([16, 40]),
+    K=st.sampled_from([8, 16, 32]),
+    f=st.sampled_from([4, 8, 12, 16]),
+    seed=st.integers(0, 100),
+)
+def test_fused_herm_matches_oracle(m, n, K, f, seed):
+    theta, idx, val, cnt = _problem(seed, m, n, K, f)
+    A0, B0 = ops.fused_herm(theta, idx, val, cnt, 0.05, mode="ref")
+    A1, B1 = ops.fused_herm(theta, idx, val, cnt, 0.05,
+                            mode="kernel_interpret", tm=8, tk=8, f_mult=8)
+    np.testing.assert_allclose(A0, A1, atol=2e-4, rtol=1e-4)
+    np.testing.assert_allclose(B0, B1, atol=2e-4, rtol=1e-4)
+
+
+def test_fused_herm_weighted_lambda_diagonal():
+    """A_u must carry lambda * n_u on the diagonal (paper eq. 2)."""
+    theta, idx, val, cnt = _problem(3, 16, 32, 16, 8)
+    lam = 0.7
+    A, _ = ops.fused_herm(theta, idx, val, cnt, lam, mode="ref")
+    g = jnp.take(theta, idx, axis=0)
+    mask = kref.mask_from_cnt(cnt, idx.shape[1], jnp.float32)
+    gm = g * mask[..., None]
+    raw = jnp.einsum("ukf,ukg->ufg", gm, g)
+    diag_expect = jnp.where(cnt > 0, lam * cnt.astype(jnp.float32), 1.0)
+    got = jnp.diagonal(A - raw, axis1=1, axis2=2)
+    np.testing.assert_allclose(
+        got, jnp.broadcast_to(diag_expect[:, None], got.shape), atol=1e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    m=st.sampled_from([8, 16]),
+    f=st.sampled_from([4, 8, 16]),
+    seed=st.integers(0, 100),
+)
+def test_batch_solve_matches_oracle(m, f, seed):
+    rng = np.random.default_rng(seed)
+    L = rng.standard_normal((m, f, f)) * 0.3
+    A = jnp.asarray(L @ np.transpose(L, (0, 2, 1))
+                    + 2.0 * np.eye(f)[None], jnp.float32)
+    B = jnp.asarray(rng.standard_normal((m, f)), jnp.float32)
+    x0 = kref.batch_solve_ref(A, B)
+    x1 = ops.batch_solve(A, B, mode="kernel_interpret", tb=8)
+    np.testing.assert_allclose(x0, x1, atol=5e-4, rtol=5e-4)
+
+
+def test_batch_solve_actually_solves():
+    rng = np.random.default_rng(1)
+    f, m = 12, 16
+    L = rng.standard_normal((m, f, f)) * 0.4
+    A = jnp.asarray(L @ np.transpose(L, (0, 2, 1)) + 3 * np.eye(f)[None],
+                    jnp.float32)
+    B = jnp.asarray(rng.standard_normal((m, f)), jnp.float32)
+    x = ops.batch_solve(A, B, mode="kernel_interpret", tb=8)
+    np.testing.assert_allclose(jnp.einsum("uij,uj->ui", A, x), B,
+                               atol=1e-3, rtol=1e-3)
+
+
+def test_hbm_accum_ablation_matches():
+    """Fig. 7 ablation kernel computes the same result (it is only slower)."""
+    theta, idx, val, cnt = _problem(7, 16, 40, 24, 8)
+    A0, B0 = ops.fused_herm(theta, idx, val, cnt, 0.05, mode="ref")
+    g = jnp.take(theta, idx, axis=0)
+    mask = kref.mask_from_cnt(cnt, idx.shape[1], jnp.float32)
+    diag = jnp.where(cnt > 0, 0.05 * cnt.astype(jnp.float32), 1.0)
+    A1, B1 = herm_hbm_accum(g, val, mask, diag, tm=8, tk=8, interpret=True)
+    np.testing.assert_allclose(A0, A1, atol=2e-4, rtol=1e-4)
+    np.testing.assert_allclose(B0, B1, atol=2e-4, rtol=1e-4)
+
+
+def test_padding_invariance():
+    """fused_herm result must not depend on tile padding (tm/tk/f_mult)."""
+    theta, idx, val, cnt = _problem(11, 24, 40, 24, 12)
+    A0, B0 = ops.fused_herm(theta, idx, val, cnt, 0.05, mode="ref")
+    for tm, tk, fm in [(8, 8, 8), (8, 16, 16), (16, 32, 32)]:
+        A1, B1 = ops.fused_herm(theta, idx, val, cnt, 0.05,
+                                mode="kernel_interpret", tm=tm, tk=tk,
+                                f_mult=fm)
+        np.testing.assert_allclose(A0, A1, atol=2e-4, rtol=1e-4)
+        np.testing.assert_allclose(B0, B1, atol=2e-4, rtol=1e-4)
+
+
+def test_als_update_factor_end_to_end():
+    theta, idx, val, cnt = _problem(5, 16, 32, 16, 8)
+    x_ref = kref.batch_solve_ref(*kref.fused_herm_gathered_ref(
+        theta, idx, val, cnt, 0.05))
+    x_kern = ops.als_update_factor(theta, idx, val, cnt, 0.05,
+                                   mode="kernel_interpret",
+                                   tm=8, tk=8, tb=8, f_mult=8)
+    np.testing.assert_allclose(x_ref, x_kern, atol=2e-3, rtol=2e-3)

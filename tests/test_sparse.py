@@ -1,0 +1,96 @@
+"""Sparse substrate: PaddedELL round trips, partitioning invariants."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.partition import plan_partitions
+from repro.sparse import padded, synth
+
+
+def _random_coo(rng, m, n, nnz):
+    rows = rng.integers(0, m, nnz)
+    cols = rng.integers(0, n, nnz)
+    key = rows * n + cols
+    _, uniq = np.unique(key, return_index=True)
+    rows, cols = rows[uniq], cols[uniq]
+    vals = rng.standard_normal(len(rows)).astype(np.float32)
+    return rows, cols, vals
+
+
+def _to_dense(ell: padded.PaddedELL) -> np.ndarray:
+    d = np.zeros((ell.m, ell.n_cols), np.float32)
+    for u in range(ell.m):
+        for k in range(int(ell.cnt[u])):
+            d[u, ell.idx[u, k]] += ell.val[u, k]
+    return d
+
+
+@settings(max_examples=10, deadline=None)
+@given(m=st.integers(4, 32), n=st.integers(4, 32),
+       nnz=st.integers(1, 200), seed=st.integers(0, 1000))
+def test_pad_csr_fast_equals_slow(m, n, nnz, seed):
+    rng = np.random.default_rng(seed)
+    rows, cols, vals = _random_coo(rng, m, n, nnz)
+    ptr, cc, vv = padded.csr_from_coo(rows, cols, vals, m)
+    a = padded.pad_csr(ptr, cc, vv, n)
+    b = padded.pad_csr_fast(ptr, cc, vv, n)
+    np.testing.assert_array_equal(a.idx, b.idx)
+    np.testing.assert_array_equal(a.val, b.val)
+    np.testing.assert_array_equal(a.cnt, b.cnt)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 1000), p=st.sampled_from([2, 4]))
+def test_partition_preserves_matrix(seed, p):
+    """Property: the p column shards reassemble exactly to the original R
+    (paper eq. 5: partial sums over shards == full sum)."""
+    rng = np.random.default_rng(seed)
+    m, n = 16, 8 * p
+    rows, cols, vals = _random_coo(rng, m, n, 120)
+    ptr, cc, vv = padded.csr_from_coo(rows, cols, vals, m)
+    ell = padded.pad_csr_fast(ptr, cc, vv, n)
+    parts = padded.partition_padded(ell, p)
+    dense = _to_dense(ell)
+    reassembled = np.zeros_like(dense)
+    npp = n // p
+    for i in range(p):
+        shard = padded.PaddedELL(parts.idx[i], parts.val[i], parts.cnt[i], npp)
+        reassembled[:, i * npp:(i + 1) * npp] += _to_dense(shard)
+    np.testing.assert_allclose(dense, reassembled, atol=1e-6)
+    # counts decompose too
+    np.testing.assert_array_equal(parts.cnt.sum(axis=0), ell.cnt)
+
+
+def test_synthetic_ratings_shapes_and_split():
+    spec = synth.scaled(synth.DATASETS["netflix"], 0.003, f=8)
+    r, rt, rte, (xs, ts) = synth.make_synthetic_ratings(spec, seed=0)
+    assert r.m == spec.m and rt.m == spec.n
+    assert r.nnz + rte.nnz > 0
+    assert abs(rte.nnz / max(r.nnz + rte.nnz, 1) - 0.1) < 0.05
+    # R^T has the same nonzeros
+    assert r.nnz == rt.nnz
+
+
+def test_planner_netflix_single_device():
+    """Paper §4.3 best practice 1: Netflix (f=100) fits one 12-16GB device
+    with p=1 (MO-ALS)."""
+    s = synth.DATASETS["netflix"]
+    plan = plan_partitions(s.m, s.n, s.nnz, s.f)
+    assert plan.fits and plan.p == 1
+
+
+def test_planner_huge_needs_partitioning():
+    """Facebook-scale (f=100) cannot fit p=1/q=1 — the planner must split."""
+    s = synth.DATASETS["cumf_max"]
+    plan = plan_partitions(s.m, s.n, s.nnz, s.f)
+    assert plan.fits
+    assert plan.q > 1
+    # memory constraint actually honored
+    assert plan.bytes_per_device < 16 * (1 << 30)
+
+
+def test_planner_monotone_in_hbm():
+    s = synth.DATASETS["hugewiki"]
+    small = plan_partitions(s.m, s.n, s.nnz, s.f, hbm_bytes=8 << 30)
+    big = plan_partitions(s.m, s.n, s.nnz, s.f, hbm_bytes=64 << 30)
+    assert small.q >= big.q
