@@ -14,6 +14,8 @@ import jax.numpy as jnp
 from jax import lax
 from jax.sharding import PartitionSpec as P
 
+from repro import compat
+
 
 def _local_write_seq(kc, kn, ln, offset):
     """kc [B, S_loc, KV, dh]; kn [B, KV, dh]; ln [B] global positions;
@@ -63,7 +65,7 @@ def cache_write(kc, kn, lengths, *, mesh=None, dp=None,
     def body(kc_loc, kn_loc, ln_loc, pos_loc):
         return _local_write_seq(kc_loc, kn_loc, ln_loc, pos_loc[0])
 
-    return jax.shard_map(
+    return compat.shard_map(
         body, mesh=mesh,
         in_specs=(cache_spec, new_spec, len_spec, P(seq_axis)),
         out_specs=cache_spec,

@@ -15,6 +15,8 @@ import jax.numpy as jnp
 from jax import lax
 from jax.sharding import PartitionSpec as P
 
+from repro import compat
+
 NEG_INF = -1e30
 
 
@@ -67,7 +69,7 @@ def flash_decode(q, k_cache, v_cache, lengths, *, mesh, axis="model",
         out = o / jnp.maximum(l, 1e-30)[..., None]
         return out.reshape(b, h, dh).astype(qq.dtype)
 
-    return jax.shard_map(
+    return compat.shard_map(
         local, mesh=mesh,
         in_specs=(P(), P(None, axis), P(None, axis), P(), P(axis)),
         out_specs=P(),
@@ -140,7 +142,7 @@ def flash_decode_update(q, k_cache, v_cache, k_new, v_new, lengths, *,
         out = o / jnp.maximum(l, 1e-30)[..., None]
         return out.reshape(qq.shape).astype(qq.dtype), kc, vc
 
-    return jax.shard_map(
+    return compat.shard_map(
         local, mesh=mesh,
         in_specs=(q_spec, cache_spec, cache_spec, new_spec, new_spec,
                   P(dp), P(seq_axis)),

@@ -27,8 +27,8 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
-from jax.experimental.shard_map import shard_map
 
+from repro import compat
 from repro.kernels import ops as kops
 
 
@@ -146,9 +146,9 @@ def make_su_als_fns(
     def _wrap(theta, idx, val, cnt):
         def inner(t, i, v, c):
             return update(t, i, v, c[:, 0])
-        return shard_map(
+        return compat.shard_map(
             inner, mesh=mesh, in_specs=in_specs, out_specs=out_spec,
-            check_rep=False,
+            check_vma=False,
         )(theta, idx, val, cnt)
 
     data_rows = NamedSharding(mesh, P("data", None))

@@ -17,6 +17,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro import compat
+
 
 def _cholesky_inplace(A: jax.Array) -> jax.Array:
     """Right-looking Cholesky of a batch [TB, F, F]; returns lower L."""
@@ -92,7 +94,7 @@ def batch_solve_pallas(
     """x_u = A_u^{-1} B_u for every u, one VMEM-resident batch per grid step."""
     m, F, _ = A.shape
     assert m % tb == 0, (m, tb)
-    return pl.pallas_call(
+    return compat.pallas_call(
         _batch_solve_kernel,
         grid=(m // tb,),
         in_specs=[

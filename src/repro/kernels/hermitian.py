@@ -28,7 +28,8 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+
+from repro import compat
 
 
 def _fused_herm_kernel(diag_ref, g_ref, val_ref, mask_ref,
@@ -90,7 +91,7 @@ def fused_herm_pallas(
         jax.ShapeDtypeStruct((m, F, F), jnp.float32),
         jax.ShapeDtypeStruct((m, F), jnp.float32),
     )
-    a, b = pl.pallas_call(
+    a, b = compat.pallas_call(
         kernel,
         grid=grid,
         in_specs=[
@@ -105,10 +106,10 @@ def fused_herm_pallas(
         ),
         out_shape=out_shapes,
         scratch_shapes=[
-            pltpu.VMEM((tm, F, F), jnp.float32),   # accA — the «register file»
-            pltpu.VMEM((tm, F), jnp.float32),      # accB
+            compat.vmem((tm, F, F), jnp.float32),  # accA — the «register file»
+            compat.vmem((tm, F), jnp.float32),     # accB
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compat.tpu_compiler_params(
             dimension_semantics=("parallel", "arbitrary"),
         ),
         interpret=interpret,
@@ -145,7 +146,7 @@ def herm_hbm_accum(
     assert K % tk == 0
     acc_a = jnp.zeros((m, F, F), jnp.float32)
     acc_b = jnp.zeros((m, F), jnp.float32)
-    onebin = pl.pallas_call(
+    onebin = compat.pallas_call(
         _herm_onebin_kernel,
         grid=(m // tm,),
         in_specs=[

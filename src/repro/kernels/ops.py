@@ -8,7 +8,9 @@ calls.  They handle:
 - kernel-vs-oracle dispatch (``use_kernel=False`` or non-TPU backends fall
   back to the jnp oracle; on CPU the kernel runs in interpret mode inside
   tests only — production entry points use the oracle on CPU so jit costs
-  stay sane).
+  stay sane).  ``mode="kernel"`` off-TPU no longer crashes: the pallas
+  calls go through ``repro.compat.pallas_call``, which degrades to the
+  interpreter when no Mosaic compiler is present.
 """
 from __future__ import annotations
 

@@ -6,8 +6,7 @@ dry-run sees 512 placeholder devices via XLA_FLAGS).
 """
 from __future__ import annotations
 
-import jax
-from jax.sharding import AxisType
+from repro import compat
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -22,14 +21,12 @@ def make_production_mesh(*, multi_pod: bool = False):
     """
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return compat.make_mesh(shape, axes, axis_types="auto")
 
 
 def make_mesh(shape, axes):
     """Small/test meshes with the same axis conventions."""
-    return jax.make_mesh(tuple(shape), tuple(axes),
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return compat.make_mesh(tuple(shape), tuple(axes), axis_types="auto")
 
 
 # Hardware constants of the target (TPU v5e-class chip) — single source of

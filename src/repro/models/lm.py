@@ -18,6 +18,7 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from repro import compat
 from repro.configs.base import ArchSpec, ModelConfig, ShapeConfig
 from repro.distributed.sharding import constrain, dp_axes
 from repro.models import transformer as T
@@ -195,7 +196,7 @@ def make_train_step(
 
             def sync(g):
                 return compressed_pod_psum(g, key)
-            grads = jax.shard_map(
+            grads = compat.shard_map(
                 sync, mesh=mesh,
                 in_specs=jax.tree.map(lambda _: P(), grads),
                 out_specs=jax.tree.map(lambda _: P(), grads),

@@ -12,8 +12,8 @@ replicated over "model" (standard TP residual stream), so each model rank
 routes identical tokens into its *local* experts and the weighted expert
 outputs are combined with one psum over "model" — the same collective
 pattern as a row-parallel matmul, no all_to_all needed.  This is expressed
-with `jax.shard_map(..., axis_names={"model"})`, leaving the batch axes in
-auto mode.
+with `compat.shard_map(..., axis_names={"model"})`, leaving the batch axes
+in auto mode.
 """
 from __future__ import annotations
 
@@ -24,6 +24,8 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 from jax import lax
+
+from repro import compat
 
 
 @dataclasses.dataclass(frozen=True)
@@ -147,7 +149,7 @@ def moe_ffn(params, x, cfg: MoEConfig, mesh=None, fsdp_gather=False):
         y = routed(router, wg, wu, wd, xloc, e_loc, e_lo, t_loc, jnp.float32)
         return lax.psum(y, "model").astype(xloc.dtype)
 
-    out = jax.shard_map(
+    out = compat.shard_map(
         ranked, mesh=mesh,
         in_specs=(P(ws), P("model", ws), P("model", ws),
                   P("model", None, ws), tok_spec),

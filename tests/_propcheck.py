@@ -1,0 +1,94 @@
+"""Minimal property-sweep helper: the `given/settings/strategies` subset
+this repo's tests use, with or without hypothesis installed.
+
+When hypothesis is importable, its real decorators are re-exported
+unchanged (full shrinking / example databases / health checks).  When it
+is not — the pinned CI environment deliberately omits it — a small
+deterministic fallback provides the same surface:
+
+- ``st.integers(lo, hi)``, ``st.sampled_from(seq)``, ``st.booleans()``
+- ``@settings(max_examples=N, deadline=...)`` (other kwargs ignored)
+- ``@given(**kwargs)`` — runs the test body ``max_examples`` times over a
+  deterministic pseudo-random sweep of the strategy space (seeded PRNG, so
+  every run and every machine sees the same examples).
+
+The fallback intentionally does *not* shrink or persist failures; a
+failing example is reported in the assertion message so it can be pinned
+as a regression test by hand.
+"""
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings, strategies
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+    import numpy as _np
+
+    _DEFAULT_MAX_EXAMPLES = 10
+    _SWEEP_SEED = 0xC0FFEE
+
+    class _Strategy:
+        def __init__(self, pick):
+            self._pick = pick
+
+        def example_for(self, rng):
+            return self._pick(rng)
+
+    class _StrategiesNS:
+        """The ``strategies`` (``st``) namespace subset."""
+
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(
+                lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+        @staticmethod
+        def sampled_from(elements):
+            elements = list(elements)
+            return _Strategy(
+                lambda rng: elements[int(rng.integers(len(elements)))])
+
+        @staticmethod
+        def booleans():
+            return _Strategy(lambda rng: bool(rng.integers(2)))
+
+    strategies = _StrategiesNS()
+
+    def settings(*, max_examples=_DEFAULT_MAX_EXAMPLES, deadline=None, **_):
+        """Record max_examples on the (already-)wrapped test function."""
+        def deco(fn):
+            fn._propcheck_max_examples = max_examples
+            return fn
+        return deco
+
+    def given(**strats):
+        """Deterministic sweep over the named strategies.
+
+        The wrapper takes no parameters on purpose: pytest must not
+        mistake the swept arguments for fixtures.
+        """
+        def deco(fn):
+            def wrapper():
+                n = getattr(wrapper, "_propcheck_max_examples",
+                            _DEFAULT_MAX_EXAMPLES)
+                rng = _np.random.default_rng(_SWEEP_SEED)
+                for i in range(n):
+                    kwargs = {name: s.example_for(rng)
+                              for name, s in strats.items()}
+                    # Exception only: pytest.skip()/KeyboardInterrupt are
+                    # BaseExceptions and must keep their control-flow
+                    # meaning rather than becoming test failures.
+                    try:
+                        fn(**kwargs)
+                    except Exception as e:
+                        raise AssertionError(
+                            f"propcheck example {i + 1}/{n} failed for "
+                            f"{fn.__name__}({kwargs!r}): {e}") from e
+            wrapper.__name__ = fn.__name__
+            wrapper.__qualname__ = getattr(fn, "__qualname__", fn.__name__)
+            wrapper.__doc__ = fn.__doc__
+            wrapper.__module__ = fn.__module__
+            return wrapper
+        return deco

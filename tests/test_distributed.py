@@ -12,9 +12,22 @@ REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 
 def run_script(body: str):
+    # Propagate the parent environment (local XLA_FLAGS / PYTHONPATH
+    # overrides survive); only add what the subprocess additionally needs:
+    # 8 forced host devices and the repo's src on the import path.  The
+    # device count itself is PINNED, not inherited: these tests are
+    # written for an 8-way topology, and importing repro.launch.dryrun
+    # anywhere in the parent process plants a 512-device flag in
+    # os.environ that must not leak through.
     env = dict(os.environ)
-    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
-    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    flags = [f for f in env.get("XLA_FLAGS", "").split()
+             if not f.startswith("--xla_force_host_platform_device_count")]
+    flags.append("--xla_force_host_platform_device_count=8")
+    env["XLA_FLAGS"] = " ".join(flags)
+    src = os.path.join(REPO, "src")
+    pp = env.get("PYTHONPATH", "")
+    if src not in pp.split(os.pathsep):
+        env["PYTHONPATH"] = src + (os.pathsep + pp if pp else "")
     out = subprocess.run([sys.executable, "-c", body], env=env,
                          capture_output=True, text=True, timeout=1200)
     assert out.returncode == 0, f"stdout:\n{out.stdout}\nstderr:\n{out.stderr}"
@@ -152,6 +165,7 @@ def test_hierarchical_reduction_equals_flat():
     run_script("""
 import jax, numpy as np, jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
+from repro import compat
 from repro.launch.mesh import make_mesh
 from repro.distributed import collectives as C
 
@@ -164,11 +178,11 @@ def flat(v):
 def hier(v):
     return C.hierarchical_reduce_scatter(v, 'model', 'pod')
 
-f1 = jax.shard_map(flat, mesh=mesh, in_specs=P(), out_specs=P(('model','pod')),
-                   axis_names={'pod','data','model'}, check_vma=False)(x)
+f1 = compat.shard_map(flat, mesh=mesh, in_specs=P(), out_specs=P(('model','pod')),
+                      axis_names={'pod','data','model'}, check_vma=False)(x)
 # hierarchical: scatter over model only, then psum over pod (replicated)
-f2 = jax.shard_map(hier, mesh=mesh, in_specs=P(), out_specs=P('model'),
-                   axis_names={'pod','data','model'}, check_vma=False)(x)
+f2 = compat.shard_map(hier, mesh=mesh, in_specs=P(), out_specs=P('model'),
+                      axis_names={'pod','data','model'}, check_vma=False)(x)
 want = 4 * np.asarray(x)   # psum over model x pod = 4 copies ('data' stays auto)
 assert np.allclose(f1, want, atol=1e-4)
 assert np.allclose(f2, want, atol=1e-4)
@@ -213,6 +227,7 @@ def test_pod_compressed_grad_sync():
     run_script("""
 import jax, numpy as np, jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
+from repro import compat
 from repro.launch.mesh import make_mesh
 from repro.models.lm import compressed_pod_psum
 
@@ -220,10 +235,10 @@ mesh = make_mesh((2, 2, 2), ('pod', 'data', 'model'))
 rng = np.random.default_rng(0)
 g = {'w': jnp.asarray(rng.standard_normal((32, 8)) * 1e-3, jnp.float32)}
 key = jax.random.PRNGKey(0)
-out = jax.shard_map(lambda gg: compressed_pod_psum(gg, key),
-                    mesh=mesh, in_specs=(jax.tree.map(lambda _: P(), g),),
-                    out_specs=jax.tree.map(lambda _: P(), g),
-                    axis_names={'pod','data','model'}, check_vma=False)(g)
+out = compat.shard_map(lambda gg: compressed_pod_psum(gg, key),
+                       mesh=mesh, in_specs=(jax.tree.map(lambda _: P(), g),),
+                       out_specs=jax.tree.map(lambda _: P(), g),
+                       axis_names={'pod','data','model'}, check_vma=False)(g)
 # replicated input: compressed mean over pods == input within quant error
 err = np.abs(np.asarray(out['w']) - np.asarray(g['w'])).max()
 scale = float(jnp.max(jnp.abs(g['w']))) / 127

@@ -1,13 +1,14 @@
 """Per-kernel correctness: Pallas (interpret mode) vs pure-jnp oracles.
 
-Shape/dtype sweeps via hypothesis; every kernel asserts allclose against
-the ref.py oracle, per the repo contract.
+Shape/dtype sweeps via _propcheck (hypothesis when installed, a vendored
+deterministic sweep otherwise); every kernel asserts allclose against the
+ref.py oracle, per the repo contract.
 """
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _propcheck import given, settings, strategies as st
 
 from repro.kernels import ops
 from repro.kernels import ref as kref

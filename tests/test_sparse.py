@@ -1,7 +1,7 @@
 """Sparse substrate: PaddedELL round trips, partitioning invariants."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _propcheck import given, settings, strategies as st
 
 from repro.core.partition import plan_partitions
 from repro.sparse import padded, synth
