@@ -5,10 +5,16 @@ scale synthetic data on 4 GPUs and the cost ratio vs distributed-CPU
 baselines.  Here: roofline-modeled per-iteration time of our SU-ALS on one
 TPU v5e pod (256 chips) for every Table 5 data set, plus the cost model.
 All numbers are clearly labeled modeled (no TPU in this container); the
-model is the same three-term roofline validated against the dry-run."""
+model is the same three-term roofline validated against the dry-run.
+
+``measure_outofcore`` is the *measured* companion (ISSUE 2): a real
+wave-streaming run on CPU against a capped simulated device, so the
+out-of-core path has wall-clock numbers next to the roofline ones."""
 from __future__ import annotations
 
-from repro.core.partition import plan_partitions
+import time
+
+from repro.core.partition import plan_for, plan_partitions
 from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
 from repro.sparse.synth import DATASETS
 
@@ -37,6 +43,57 @@ def iteration_time_s(spec, chips=256, f_pad=None):
     return max(comp, mem) + red, comp, mem, red
 
 
+def measure_outofcore(iters: int = 2, seed: int = 0) -> list[dict]:
+    """Measured streaming path: waves >= 2 on a capped simulated CPU device.
+
+    Runs the real ``repro.outofcore`` driver on a shrunk Netflix recipe with
+    a forced multi-wave plan, and reports wall time per iteration, streamed
+    bytes, and the peak simulated device footprint vs the plan's budget.
+    Returns one record per configuration (also emitted as CSV lines) —
+    ``benchmarks/run.py`` serializes them to BENCH_outofcore.json.
+    """
+    from repro.core import als as als_mod
+    from repro.outofcore import (RatingStore, build_schedule,
+                                 required_capacity_bytes, run_streaming_als)
+    from repro.sparse import synth
+
+    records = []
+    for q, n_data in ((4, 2), (8, 2)):
+        spec = synth.scaled(DATASETS["netflix"], 0.02, f=16)
+        r, _, _, _ = synth.make_synthetic_ratings(spec, seed=seed)
+        store = RatingStore(r, q=q)
+        acc_eps = spec.n * (spec.f * spec.f + 3 * spec.f + 1) * 4
+        plan = plan_for(spec.m, spec.n, r.nnz, spec.f, p=1, q=q,
+                        n_data=n_data, fill=store.worst_fill,
+                        eps=acc_eps, buffers=4)
+        sched = build_schedule(plan, spec.m, spec.n, n_data=n_data)
+        cfg = als_mod.AlsConfig(f=spec.f, lam=spec.lam, iters=iters,
+                                mode="ref")
+        t0 = time.perf_counter()
+        _, _, tel = run_streaming_als(store, sched, cfg)
+        iter_s = (time.perf_counter() - t0) / iters
+        rec = {
+            "name": f"outofcore_q{q}_w{len(sched.waves)}",
+            "m": spec.m, "n": spec.n, "nnz": r.nnz, "f": spec.f,
+            "q": q, "n_data": n_data, "waves": len(sched.waves),
+            "iters": iters,
+            "measured_iter_s": iter_s,
+            "bytes_streamed_per_iter": tel.bytes_streamed // iters,
+            "peak_device_bytes": tel.peak_bytes,
+            "capacity_bytes": tel.capacity_bytes,
+            "required_capacity_bytes": required_capacity_bytes(
+                store, sched, spec.f),
+            "fits": tel.peak_bytes <= tel.capacity_bytes,
+        }
+        records.append(rec)
+        emit(rec["name"], iter_s * 1e6,
+             f"measured;waves={rec['waves']};peak_MiB="
+             f"{tel.peak_bytes / 2**20:.1f};cap_MiB="
+             f"{tel.capacity_bytes / 2**20:.1f};streamed_MiB_per_iter="
+             f"{rec['bytes_streamed_per_iter'] / 2**20:.1f}")
+    return records
+
+
 def run():
     for name, spec in DATASETS.items():
         t, comp, mem, red = iteration_time_s(spec)
@@ -51,6 +108,7 @@ def run():
             derived = (f"modeled_iter_s={t:.1f};usd_per_iter={cost_per_iter:.2f};"
                        f"plan=p{plan.p}q{plan.q};fits={plan.fits}")
         emit(f"fig11_huge_{name}", t * 1e6, derived)
+    return measure_outofcore()
 
 
 if __name__ == "__main__":

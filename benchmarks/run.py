@@ -1,8 +1,13 @@
 """Benchmark entry point: one function per paper table/figure.
-Prints ``name,us_per_call,derived`` CSV lines."""
+Prints ``name,us_per_call,derived`` CSV lines; the measured out-of-core
+streaming records from bench_huge additionally land in BENCH_outofcore.json.
+"""
 from __future__ import annotations
 
+import json
 import sys
+
+OUTOFCORE_JSON = "BENCH_outofcore.json"
 
 
 def main() -> None:
@@ -16,7 +21,7 @@ def main() -> None:
         bench_register_ablation, # Fig. 7
         bench_texture,           # Fig. 8
         bench_scaling,           # Fig. 9/10
-        bench_huge,              # Fig. 11 + Table 1
+        bench_huge,              # Fig. 11 + Table 1 + measured out-of-core
         bench_reduction,         # Fig. 5
         bench_kernels,           # kernel-level (beyond-paper fusion)
         bench_lm_substrate,      # LM substrate overhead
@@ -24,7 +29,12 @@ def main() -> None:
     if "--quick" in sys.argv:
         mods = mods[:2]
     for m in mods:
-        m.run()
+        out = m.run()
+        if m is bench_huge and out:
+            with open(OUTOFCORE_JSON, "w") as f:
+                json.dump(out, f, indent=2)
+            print(f"# wrote {len(out)} measured streaming records to "
+                  f"{OUTOFCORE_JSON}", flush=True)
 
 
 if __name__ == '__main__':

@@ -48,6 +48,28 @@ def als_init(m: int, n: int, cfg: AlsConfig) -> AlsState:
     return AlsState(x=x, theta=theta, iteration=jnp.int32(0))
 
 
+def _map_row_blocks(solve_block, arrays, batch_rows: int, pad_vals=None):
+    """Row-block scaffolding shared by the q-batched solves: pad the leading
+    axis up to a multiple of ``batch_rows`` (with zeros, or a broadcast
+    ``pad_vals[i]`` per array — e.g. I for Hermitians so padded solves stay
+    nonsingular), ``lax.map`` over the blocks, unpad the result."""
+    m = arrays[0].shape[0]
+    nb = -(-m // batch_rows)
+    pad = nb * batch_rows - m
+    blocked = []
+    for i, a in enumerate(arrays):
+        pv = None if pad_vals is None else pad_vals[i]
+        if pad:
+            if pv is None:
+                a = jnp.pad(a, ((0, pad),) + ((0, 0),) * (a.ndim - 1))
+            else:
+                a = jnp.concatenate(
+                    [a, jnp.broadcast_to(pv, (pad,) + a.shape[1:])])
+        blocked.append(a.reshape((nb, batch_rows) + a.shape[1:]))
+    out = jax.lax.map(solve_block, tuple(blocked))
+    return out.reshape((nb * batch_rows,) + out.shape[2:])[:m]
+
+
 def _update_factor(theta, idx, val, cnt, cfg: AlsConfig) -> jax.Array:
     """Solve every row of one factor given the other side fixed."""
     solve = functools.partial(
@@ -55,16 +77,58 @@ def _update_factor(theta, idx, val, cnt, cfg: AlsConfig) -> jax.Array:
         tm=cfg.tm, tk=cfg.tk, tb=cfg.tb, f_mult=cfg.f_mult)
     m = idx.shape[0]
     if cfg.batch_rows and cfg.batch_rows < m:
-        nb = -(-m // cfg.batch_rows)
-        pad = nb * cfg.batch_rows - m
-        idx_b = jnp.pad(idx, ((0, pad), (0, 0))).reshape(nb, cfg.batch_rows, -1)
-        val_b = jnp.pad(val, ((0, pad), (0, 0))).reshape(nb, cfg.batch_rows, -1)
-        cnt_b = jnp.pad(cnt, (0, pad)).reshape(nb, cfg.batch_rows)
-        x = jax.lax.map(lambda b: solve(theta, b[0].astype(jnp.int32),
-                                        b[1], b[2].astype(jnp.int32)),
-                        (idx_b.astype(jnp.int32), val_b, cnt_b.astype(jnp.int32)))
-        return x.reshape(nb * cfg.batch_rows, -1)[:m]
+        return _map_row_blocks(
+            lambda b: solve(theta, b[0].astype(jnp.int32),
+                            b[1], b[2].astype(jnp.int32)),
+            (idx.astype(jnp.int32), val, cnt.astype(jnp.int32)),
+            cfg.batch_rows)
     return solve(theta, idx, val, cnt)
+
+
+def update_rows(fixed, idx, val, cnt, cfg: AlsConfig) -> jax.Array:
+    """Per-slice update entry point (out-of-core wave driver, solve side).
+
+    Solves the rows of one factor slice given the ``fixed`` other factor —
+    identical math to a full ``_update_factor`` call restricted to the slice,
+    so streaming a factor in row slices reproduces the in-core trajectory.
+    """
+    return _update_factor(fixed, idx, val, cnt, cfg)
+
+
+def partial_herm(x_batch, idx_loc, val_loc, cnt_loc, cfg: AlsConfig):
+    """Per-batch partial Hermitian (out-of-core wave driver, accumulate side).
+
+    ``idx_loc`` indexes into ``x_batch`` (batch-local user coordinates, the
+    output of ``partition_padded`` on R^T).  Returns (A_j, B_j) partial sums;
+    summing over all q batches reproduces the full-gather Hermitian because
+    the weighted-lambda diagonal ``lam * cnt_loc`` also telescopes to
+    ``lam * cnt_total`` — the same partial-sum scheme SU-ALS reduces over the
+    "model" axis (eq. 5-7), serialized over waves instead.
+    """
+    return kops.fused_herm(
+        x_batch, idx_loc, val_loc, cnt_loc, cfg.lam,
+        mode=cfg.mode, tm=cfg.tm, tk=cfg.tk, f_mult=cfg.f_mult,
+        diag_fallback=False)
+
+
+def solve_accumulated(A, B, cnt_total, cfg: AlsConfig) -> jax.Array:
+    """Solve a factor from accumulated partial Hermitians.
+
+    Applies the globally-empty-row guard post-accumulation (a row empty in
+    every batch gets A = I, B = 0 -> x = 0, matching ``fused_herm``'s
+    ``diag_fallback``) then runs the batched Cholesky solve, in row blocks of
+    ``cfg.batch_rows`` when set so the solve working set stays bounded.
+    """
+    f = A.shape[-1]
+    empty = (cnt_total <= 0).astype(A.dtype)
+    A = A + empty[:, None, None] * jnp.eye(f, dtype=A.dtype)
+    solve = functools.partial(kops.batch_solve, mode=cfg.mode, tb=cfg.tb)
+    m = A.shape[0]
+    if cfg.batch_rows and cfg.batch_rows < m:
+        return _map_row_blocks(
+            lambda ab: solve(ab[0], ab[1]), (A, B), cfg.batch_rows,
+            pad_vals=(jnp.eye(f, dtype=A.dtype), None))
+    return solve(A, B)
 
 
 def als_iteration(state: AlsState, r, rt, cfg: AlsConfig) -> AlsState:

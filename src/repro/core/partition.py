@@ -17,6 +17,7 @@ and q to the "data" axis; q larger than the data axis runs in waves
 from __future__ import annotations
 
 import dataclasses
+from typing import Optional, Tuple
 
 GiB = 1 << 30
 
@@ -36,11 +37,14 @@ class PartitionPlan:
                 f"total={self.bytes_per_device / GiB:.3f}GiB fits={self.fits} [{t}]")
 
 
-def _bytes_per_device(m, n, nnz, f, p, q, fill=1.5, dtype_bytes=4, eps=512 << 20):
+def _bytes_per_device(m, n, nnz, f, p, q, fill=1.5, dtype_bytes=4, eps=512 << 20,
+                      buffers=1):
     terms = {
         "X_batch": m * f * dtype_bytes // q,
         "Theta_shard": n * f * dtype_bytes // p,
-        "R_shard": int(2 * nnz * dtype_bytes * fill) // (p * q),  # idx+val, padded
+        # idx+val, padded; ``buffers`` > 1 models the §4.4 preload buffers an
+        # out-of-core run keeps resident (current shard + prefetched next ones)
+        "R_shard": int(2 * nnz * dtype_bytes * fill) // (p * q) * buffers,
         "A_batch": m * f * f * dtype_bytes // q,
         "B_batch": m * f * dtype_bytes // q,
         "eps": eps,
@@ -89,3 +93,85 @@ def plan_partitions(
         q *= 2
     total, terms = _bytes_per_device(m, n, nnz, f, p, q, fill, dtype_bytes, eps)
     return PartitionPlan(p, q, total, terms, False, -(-q // n_data))
+
+
+def plan_for(
+    m: int, n: int, nnz: int, f: int,
+    p: int, q: int,
+    *,
+    n_data: int = 16,
+    hbm_bytes: int = 16 * GiB,
+    fill: float = 1.5,
+    dtype_bytes: int = 4,
+    eps: int = 512 << 20,
+    buffers: int = 1,
+) -> PartitionPlan:
+    """Cost a *given* (p, q) choice — the forced-plan entry point.
+
+    ``plan_partitions`` searches for (p, q); this prices one the caller picked
+    (tests force ``waves >= 2`` plans on in-core-sized data; the out-of-core
+    example caps the simulated device).  ``buffers`` counts how many R-shard
+    buffers stay device-resident at once: 1 is the in-core bound of eq. (8),
+    an out-of-core run double-buffering ``depth`` shards ahead needs
+    ``depth + 1`` (§4.4 preload).
+    """
+    total, terms = _bytes_per_device(
+        m, n, nnz, f, p, q, fill, dtype_bytes, eps, buffers)
+    return PartitionPlan(p, q, total, terms, total < hbm_bytes, -(-q // n_data))
+
+
+# ---------------------------------------------------------------------------
+# Schedule export: the planner's (q, waves) turned into explicit row ranges.
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class QBatch:
+    """One of the q X-row batches (the §4.4 streaming unit)."""
+
+    index: int       # global batch number in [0, q)
+    row_start: int   # first X row of the batch (inclusive)
+    row_stop: int    # one past the last X row (exclusive)
+
+    @property
+    def rows(self) -> int:
+        return self.row_stop - self.row_start
+
+
+def batch_ranges(m: int, q: int) -> Tuple[QBatch, ...]:
+    """Split ``m`` rows into ``q`` balanced contiguous batches.
+
+    Sizes differ by at most one row and every row lands in exactly one batch
+    (the invariant the wave-coverage property test pins down).
+    """
+    assert m >= 0 and q >= 1, (m, q)
+    base, rem = divmod(m, q)
+    out = []
+    start = 0
+    for b in range(q):
+        size = base + (1 if b < rem else 0)
+        out.append(QBatch(index=b, row_start=start, row_stop=start + size))
+        start += size
+    assert start == m
+    return tuple(out)
+
+
+def export_schedule(
+    plan: PartitionPlan, m: int, n_data: Optional[int] = None,
+) -> Tuple[Tuple[QBatch, ...], ...]:
+    """Explicit per-iteration wave schedule for a plan's q batches.
+
+    Returns one tuple of QBatches per wave: wave ``w`` streams batches
+    ``[w * n_data, min((w+1) * n_data, q))`` through the data axis — each
+    device on the axis takes one batch per wave, so ``len(waves) * n_data >=
+    q`` always, and ``len(waves) == plan.waves`` when ``n_data`` matches the
+    axis size the plan was computed for (the default reconstructs it from
+    ``plan.waves``).
+    """
+    q = plan.q
+    if n_data is None:
+        n_data = -(-q // plan.waves)
+    assert n_data >= 1
+    batches = batch_ranges(m, q)
+    n_waves = -(-q // n_data)
+    return tuple(
+        batches[w * n_data:(w + 1) * n_data] for w in range(n_waves))

@@ -6,6 +6,13 @@ current one computes, hiding load time "except for the first load".  The
 JAX equivalent: a background thread calls ``jax.device_put`` (async on TPU)
 ``depth`` batches ahead; dispatching the next step's computation overlaps
 its transfer with the current step's compute.
+
+Lifecycle: a consumer that abandons iteration early (break, exception, a
+wave driver resuming past the end of a half) must call ``close()`` — or use
+the prefetcher as a context manager — otherwise the worker thread would sit
+blocked forever on a full queue.  ``close()`` wakes a blocked worker, drains
+the queue, and joins the thread; it is idempotent and safe after normal
+exhaustion.
 """
 from __future__ import annotations
 
@@ -15,6 +22,8 @@ from typing import Callable, Iterator, Optional
 
 import jax
 
+_POLL_S = 0.05
+
 
 class Prefetcher:
     def __init__(self, it: Iterator, *, depth: int = 2,
@@ -23,22 +32,58 @@ class Prefetcher:
         self._put = put or (lambda x: jax.tree.map(jax.device_put, x))
         self._q: queue.Queue = queue.Queue(maxsize=depth)
         self._done = object()
+        self._stop = threading.Event()
         self._thread = threading.Thread(target=self._worker, daemon=True)
         self._thread.start()
+
+    def _offer(self, item) -> bool:
+        """put() that a concurrent close() can interrupt; False if stopped."""
+        while not self._stop.is_set():
+            try:
+                self._q.put(item, timeout=_POLL_S)
+                return True
+            except queue.Full:
+                continue
+        return False
 
     def _worker(self):
         try:
             for item in self._it:
-                self._q.put(self._put(item))   # device_put is async: the
-        except BaseException as e:             # transfer runs while compute
-            self._q.put(e)                     # proceeds on earlier batches
+                if self._stop.is_set():
+                    return
+                if not self._offer(self._put(item)):  # device_put is async:
+                    return                            # the transfer runs while
+        except BaseException as e:                    # compute proceeds on
+            self._offer(e)                            # earlier batches
             return
-        self._q.put(self._done)
+        self._offer(self._done)
+
+    def close(self):
+        """Stop the worker, drain queued items, join the thread (idempotent)."""
+        self._stop.set()
+        while self._thread.is_alive():
+            try:
+                self._q.get_nowait()     # unblock a worker stuck in _offer
+            except queue.Empty:
+                pass
+            self._thread.join(timeout=_POLL_S)
+
+    @property
+    def closed(self) -> bool:
+        return self._stop.is_set() and not self._thread.is_alive()
+
+    def __enter__(self) -> "Prefetcher":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
 
     def __iter__(self):
         return self
 
     def __next__(self):
+        if self._stop.is_set():
+            raise StopIteration
         item = self._q.get()
         if item is self._done:
             raise StopIteration

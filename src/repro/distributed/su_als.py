@@ -178,6 +178,44 @@ def make_su_als_fns(
     return update_x, update_theta, iteration
 
 
+def make_wave_update_fn(
+    mesh: Mesh,
+    lam: float,
+    *,
+    scheme: str = "two_phase",
+    mode: str = "ref",
+    tm: int = 8, tk: int = 128, tb: int = 8, f_mult: int = 128,
+    row_block: int = 0,
+):
+    """Per-slice update entry point for the out-of-core wave driver.
+
+    Bridges one host-resident wave slice onto the mesh: the slice's rating
+    arrays (in the ``shard_ratings`` layout — idx/val ``[m_slice, P*K]``,
+    cnt ``[m_slice, P]``) are placed row-sharded over ``"data"`` so each
+    device on the axis takes one q-batch of the wave, the fixed factor is
+    placed over the column axes, the shard-mapped SU-ALS update runs, and
+    the solved rows come back to host for the driver to write into its
+    factor store.  ``m_slice`` must divide the "data" axis size.
+    """
+    update_x, _, _ = make_su_als_fns(
+        mesh, lam, scheme=scheme, mode=mode,
+        tm=tm, tk=tk, tb=tb, f_mult=f_mult, row_block=row_block)
+    col_axes = tuple(a for a in ("model", "pod") if a in mesh.axis_names)
+    col_dim = col_axes[::-1] if len(col_axes) > 1 else col_axes[0]
+    rows_sh = NamedSharding(mesh, P("data", col_dim))
+    fixed_sh = NamedSharding(mesh, P(col_dim, None))
+
+    def update_slice(fixed, idx, val, cnt):
+        import numpy as np
+        fixed_d = jax.device_put(fixed, fixed_sh)
+        idx_d = jax.device_put(idx, rows_sh)
+        val_d = jax.device_put(val, rows_sh)
+        cnt_d = jax.device_put(cnt, rows_sh)
+        return np.asarray(update_x(fixed_d, idx_d, val_d, cnt_d))
+
+    return update_slice
+
+
 def shard_ratings(ell_parts, mesh: Mesh):
     """partition_padded output ([P, m, K] arrays) -> device arrays laid out
     for make_su_als_fns: idx/val [m, P*K] and cnt [m, P] with the right

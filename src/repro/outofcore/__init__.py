@@ -1,0 +1,39 @@
+"""Out-of-core wave scheduling: factorize R larger than aggregate device HBM.
+
+Implements cuMF's §4.3/§4.4 out-of-core batching as a first-class subsystem.
+Paper vocabulary -> implementation map:
+
+- **p** (Theta column shards, data parallelism): the planner's
+  ``PartitionPlan.p``.  The streaming driver executes one p-shard's view
+  (p = 1 on a single simulated device); multi-p runs place each wave on a
+  real mesh through ``distributed.su_als.make_wave_update_fn``.
+- **q** (X row batches, model parallelism): ``PartitionPlan.q``, made
+  explicit as ``core.partition.QBatch`` row ranges.  ``store.RatingStore``
+  keeps R row-major for the solve-X half and R^T column-partitioned into the
+  same q user-batches for the accumulate-Theta half — the paper's "keep R
+  and R^T in host memory".
+- **waves** (q batches beyond the device axis, §4.4 elasticity):
+  ``schedule.IterationSchedule.waves`` — each wave streams up to ``n_data``
+  consecutive q-batches through the (simulated) devices; both iteration
+  halves walk the same wave list.
+- **preload** (§4.4 "hide load time behind compute"): the driver double-
+  buffers the next wave's shards host->device through
+  ``data.prefetch.Prefetcher`` while the current wave computes;
+  ``core.partition.plan_for(buffers=depth + 2)`` prices the extra resident
+  shard buffers in the eq. (8) budget (depth queued + one held by the
+  loader thread + one being consumed).
+- **checkpoint/restart** (§4.4 fault tolerance): every completed wave
+  commits factors (+ Hermitian accumulators mid-half) through
+  ``checkpoint.CheckpointManager``; a killed run resumes mid-iteration.
+"""
+from repro.outofcore.driver import (MemoryMeter, SimulatedFailure,
+                                    StreamTelemetry, run_streaming_als)
+from repro.outofcore.schedule import (IterationSchedule, Wave, build_schedule,
+                                      required_capacity_bytes)
+from repro.outofcore.store import FactorStore, RatingStore
+
+__all__ = [
+    "FactorStore", "IterationSchedule", "MemoryMeter", "RatingStore",
+    "SimulatedFailure", "StreamTelemetry", "Wave", "build_schedule",
+    "required_capacity_bytes", "run_streaming_als",
+]

@@ -1,0 +1,292 @@
+"""Streaming ALS driver: execute a wave schedule end to end (§4.4).
+
+Per iteration the driver runs the two halves of the schedule:
+
+- **solve-X**: Theta resident on device; each wave's R row-slice is double-
+  buffered host->device through ``data.prefetch.Prefetcher`` while the
+  current wave solves its X rows (``core.als.update_rows``); solved slices
+  are written straight back to the host ``FactorStore``.
+- **accumulate-Theta**: A/B Hermitian accumulators resident; each wave
+  streams its batches' R^T column shards together with the freshly solved X
+  slices (``core.als.partial_herm``), and after the last wave the
+  accumulated systems are solved (``core.als.solve_accumulated``).
+
+Every wave completion checkpoints the full resumable state (factors +
+accumulators + global step) through ``checkpoint.CheckpointManager``, so a
+killed run restarts mid-iteration — the paper's §4.4 fault tolerance at wave
+rather than iteration granularity.
+
+A ``MemoryMeter`` tracks the *simulated device* footprint: the meter models
+one device of the ``n_data`` axis (wave payloads are divided by ``n_data``;
+replicated residents — the fixed factor, the accumulators — are counted in
+full), which is what the planner's eq. (8) budget prices.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from typing import Callable, List, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import CheckpointManager
+from repro.core import als as als_mod
+from repro.core.objective import rmse_padded
+from repro.data.prefetch import Prefetcher
+from repro.outofcore.schedule import IterationSchedule
+from repro.outofcore.store import FactorStore, RatingStore, triplet_nbytes
+
+
+class MemoryMeter:
+    """Named live-allocation tracker (thread-safe: the prefetch worker
+    registers wave buffers while the consumer frees earlier ones)."""
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._live: dict[str, int] = {}
+        self.live_bytes = 0
+        self.peak_bytes = 0
+
+    def alloc(self, name: str, nbytes: int) -> None:
+        with self._lock:
+            assert name not in self._live, name
+            self._live[name] = int(nbytes)
+            self.live_bytes += int(nbytes)
+            self.peak_bytes = max(self.peak_bytes, self.live_bytes)
+
+    def free(self, name: str) -> None:
+        with self._lock:
+            self.live_bytes -= self._live.pop(name)
+
+
+@dataclasses.dataclass
+class StreamTelemetry:
+    """What the run actually did — peak footprint, traffic, resume point."""
+
+    capacity_bytes: int = 0
+    peak_bytes: int = 0
+    waves_run: int = 0
+    batches_loaded: int = 0
+    bytes_streamed: int = 0      # host->device rating + factor-slice traffic
+    resumed_from_step: int = 0
+    wall_seconds: float = 0.0
+
+
+class SimulatedFailure(RuntimeError):
+    """Raised by ``fail_after_waves`` — stands in for a killed machine."""
+
+
+def _zeros_ckpt_tree(m_pad: int, n: int, f: int) -> dict:
+    return {
+        "x": np.zeros((m_pad, f), np.float32),
+        "theta": np.zeros((n, f), np.float32),
+        "a_acc": np.zeros((n, f, f), np.float32),
+        "b_acc": np.zeros((n, f), np.float32),
+        "c_acc": np.zeros((n,), np.float32),
+    }
+
+
+def run_streaming_als(
+    ratings: RatingStore,
+    sched: IterationSchedule,
+    cfg: als_mod.AlsConfig,
+    *,
+    factors: Optional[FactorStore] = None,
+    ckpt_dir: Optional[str] = None,
+    keep: int = 3,
+    prefetch_depth: int = 2,
+    train_eval=None,                 # (idx, val, cnt) for per-iteration RMSE
+    test_eval=None,
+    fail_after_waves: Optional[int] = None,
+    update_rows_fn: Optional[Callable] = None,
+    partial_herm_fn: Optional[Callable] = None,
+    solve_acc_fn: Optional[Callable] = None,
+    callback=None,
+) -> tuple[FactorStore, List[dict], StreamTelemetry]:
+    """Run ``cfg.iters`` streaming ALS iterations of ``sched`` over ``ratings``.
+
+    Returns (factor store, per-iteration history, telemetry).  With
+    ``ckpt_dir`` set the run resumes from the latest committed wave; the
+    ``*_fn`` hooks default to the in-process ``core.als`` entry points and
+    accept e.g. ``distributed.su_als.make_wave_update_fn`` on a real mesh.
+    """
+    assert ratings.m_pad == sched.m_pad and ratings.n == sched.n, \
+        "RatingStore and IterationSchedule were built for different shapes"
+    f = cfg.f
+    m_pad, n, n_data = sched.m_pad, sched.n, sched.n_data
+    W = len(sched.waves)
+    wpi = sched.waves_per_iteration            # 2 * W checkpoint steps/iter
+    update_rows_fn = update_rows_fn or (
+        lambda fixed, i, v, c: als_mod.update_rows(fixed, i, v, c, cfg))
+    partial_herm_fn = partial_herm_fn or (
+        lambda xb, i, v, c: als_mod.partial_herm(xb, i, v, c, cfg))
+    solve_acc_fn = solve_acc_fn or (
+        lambda A, B, c: als_mod.solve_accumulated(A, B, c, cfg))
+
+    meter = MemoryMeter()
+    tel = StreamTelemetry(capacity_bytes=sched.capacity_bytes)
+    t_start = time.perf_counter()
+
+    mgr = CheckpointManager(ckpt_dir, keep=keep) if ckpt_dir else None
+    acc_restored = None
+    start_step = 0
+    if mgr is not None:
+        tree, start_step = mgr.restore_or_init(
+            _zeros_ckpt_tree(m_pad, n, f), lambda: None)
+        if start_step:
+            factors = FactorStore.from_arrays(tree["x"], tree["theta"])
+            if start_step % wpi > W:       # killed mid-accumulate-Theta
+                acc_restored = (tree["a_acc"], tree["b_acc"], tree["c_acc"])
+    tel.resumed_from_step = start_step
+    if factors is None:
+        st = als_mod.als_init(ratings.m, n, cfg)
+        x0 = np.zeros((m_pad, f), np.float32)
+        x0[:ratings.m] = np.asarray(st.x)
+        factors = FactorStore.from_arrays(x0, np.asarray(st.theta))
+
+    saves_this_run = 0
+
+    def _save(step: int, acc=None):
+        nonlocal saves_this_run
+        if mgr is not None:
+            tree = _zeros_ckpt_tree(m_pad, n, f)
+            # snapshot copies: the manager commits async while later waves
+            # keep mutating the live factor arrays
+            tree["x"], tree["theta"] = factors.x.copy(), factors.theta.copy()
+            if acc is not None:
+                tree["a_acc"] = np.asarray(acc[0])
+                tree["b_acc"] = np.asarray(acc[1])
+                tree["c_acc"] = np.asarray(acc[2])
+            mgr.save(step, tree)
+        saves_this_run += 1
+        if fail_after_waves is not None and saves_this_run >= fail_after_waves:
+            if mgr is not None:
+                mgr.wait()                  # make sure the wave committed
+            raise SimulatedFailure(
+                f"simulated kill after {saves_this_run} wave(s)")
+
+    # ------------------------------------------------------------------
+    # solve-X half: stream R row slices, solve rows, write back.
+    # ------------------------------------------------------------------
+    def _x_half(it: int, first_wave: int):
+        theta_dev = jnp.asarray(factors.theta)
+        meter.alloc("fixed_theta", factors.theta.nbytes)
+        scratch = (sched.waves[0].rows * (f * f + 2 * f) * 4) // n_data
+
+        def gen():
+            for wave in sched.waves[first_wave:]:
+                yield wave, ratings.x_slice_triplet(
+                    wave.row_start, wave.row_stop)
+
+        def put(item):
+            wave, trip = item
+            nb = triplet_nbytes(trip)
+            # per-device share: each device on the axis takes ONE batch of
+            # the wave (a ragged last wave has fewer batches than n_data)
+            meter.alloc(f"xwave{wave.index}", nb // len(wave.batches))
+            dev = tuple(jnp.asarray(a) for a in trip)
+            return wave, dev, nb
+
+        try:
+            with Prefetcher(gen(), depth=prefetch_depth, put=put) as pf:
+                for wave, (idx, val, cnt), nb in pf:
+                    meter.alloc("x_scratch", scratch)
+                    rows = np.asarray(update_rows_fn(theta_dev, idx, val, cnt))
+                    meter.free("x_scratch")
+                    factors.write_slice("x", wave.row_start, wave.row_stop,
+                                        rows)
+                    meter.free(f"xwave{wave.index}")
+                    tel.waves_run += 1
+                    tel.batches_loaded += len(wave.batches)
+                    tel.bytes_streamed += nb
+                    _save(it * wpi + wave.index + 1)
+        finally:
+            meter.free("fixed_theta")
+
+    # ------------------------------------------------------------------
+    # accumulate-Theta half: stream R^T shards + X slices, accumulate,
+    # solve after the last wave.
+    # ------------------------------------------------------------------
+    def _theta_half(it: int, first_wave: int, acc0=None):
+        acc_bytes = n * (f * f + f + 1) * 4
+        meter.alloc("acc", acc_bytes)
+        if acc0 is not None:
+            A = jnp.asarray(acc0[0], jnp.float32)
+            B = jnp.asarray(acc0[1], jnp.float32)
+            c = jnp.asarray(acc0[2], jnp.float32)
+        else:
+            A = jnp.zeros((n, f, f), jnp.float32)
+            B = jnp.zeros((n, f), jnp.float32)
+            c = jnp.zeros((n,), jnp.float32)
+
+        def gen():
+            for wave in sched.waves[first_wave:]:
+                payload = [
+                    (b, ratings.theta_batch_triplet(b.index),
+                     factors.read_slice("x", b.row_start, b.row_stop))
+                    for b in wave.batches]
+                yield wave, payload
+
+        def put(item):
+            wave, payload = item
+            nb = sum(triplet_nbytes(t) + x.nbytes for _, t, x in payload)
+            # each simulated device holds ONE batch's shard + X slice
+            meter.alloc(f"twave{wave.index}", nb // len(payload))
+            dev = [(b, tuple(jnp.asarray(a) for a in t), jnp.asarray(x))
+                   for b, t, x in payload]
+            return wave, dev, nb
+
+        try:
+            with Prefetcher(gen(), depth=prefetch_depth, put=put) as pf:
+                for wave, payload, nb in pf:
+                    for _, (idx, val, cnt), x_dev in payload:
+                        Aj, Bj = partial_herm_fn(x_dev, idx, val, cnt)
+                        A = A + Aj
+                        B = B + Bj
+                        c = c + cnt.astype(jnp.float32)
+                    meter.free(f"twave{wave.index}")
+                    tel.waves_run += 1
+                    tel.batches_loaded += len(payload)
+                    tel.bytes_streamed += nb
+                    last = wave.index == W - 1
+                    if last:
+                        meter.alloc("theta_out", n * f * 4)
+                        factors.write_slice(
+                            "theta", 0, n, np.asarray(solve_acc_fn(A, B, c)))
+                        meter.free("theta_out")
+                    _save(it * wpi + W + wave.index + 1,
+                          acc=None if last else (A, B, c))
+        finally:
+            meter.free("acc")
+
+    # ------------------------------------------------------------------
+    history: List[dict] = []
+    it0 = start_step // wpi
+    for it in range(it0, cfg.iters):
+        resume_here = it == it0
+        r = start_step % wpi if resume_here else 0
+        if r < W:
+            _x_half(it, first_wave=r)
+        if r < wpi:
+            _theta_half(it, first_wave=max(0, r - W),
+                        acc0=acc_restored if resume_here else None)
+        rec = {"iteration": it + 1, "waves_run": tel.waves_run,
+               "peak_bytes": meter.peak_bytes}
+        if train_eval is not None or test_eval is not None:
+            x_dev = jnp.asarray(factors.x[:ratings.m])
+            t_dev = jnp.asarray(factors.theta)
+            if test_eval is not None:
+                rec["test_rmse"] = float(rmse_padded(x_dev, t_dev, *test_eval))
+            if train_eval is not None:
+                rec["train_rmse"] = float(
+                    rmse_padded(x_dev, t_dev, *train_eval))
+        history.append(rec)
+        if callback is not None:
+            callback(it, rec)
+    if mgr is not None:
+        mgr.wait()
+    tel.peak_bytes = meter.peak_bytes
+    tel.wall_seconds = time.perf_counter() - t_start
+    return factors, history, tel

@@ -1,0 +1,127 @@
+"""Wave schedule: a PartitionPlan made executable (paper §4.3/§4.4).
+
+``build_schedule`` turns the planner's (p, q, waves) into explicit per-
+iteration work: which q-batches (X row ranges) each wave streams, which R
+shards it touches, and which factor slices must be device-resident.  One
+iteration runs two halves over the *same* wave list:
+
+- **solve-X half** — Theta is fully resident (the plan's ``Theta_shard``
+  term); wave ``w`` streams the R rows of its batches, solves those X rows
+  directly, and writes the slice back to host.
+- **accumulate-Theta half** — the A/B Hermitian accumulators for all n items
+  are resident; wave ``w`` streams, per batch ``j``, the R^T column shard of
+  user-batch ``j`` plus the freshly solved X slice of batch ``j`` (the
+  "factor slices resident" of §4.4), and adds the batch's partial Hermitians.
+  After the last wave the accumulated systems are solved in row blocks.
+
+This is SU-ALS's partial-sum scheme (eq. 5-7) serialized over waves: with
+``n_data`` simulated devices, each wave models one synchronous step in which
+every device holds one q-batch.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+from repro.core.partition import GiB, PartitionPlan, QBatch, export_schedule
+
+
+@dataclasses.dataclass(frozen=True)
+class Wave:
+    """One synchronous streaming step: up to n_data contiguous q-batches."""
+
+    index: int
+    batches: Tuple[QBatch, ...]
+
+    @property
+    def row_start(self) -> int:
+        return self.batches[0].row_start
+
+    @property
+    def row_stop(self) -> int:
+        return self.batches[-1].row_stop
+
+    @property
+    def rows(self) -> int:
+        return self.row_stop - self.row_start
+
+
+@dataclasses.dataclass(frozen=True)
+class IterationSchedule:
+    plan: PartitionPlan
+    m_pad: int                  # padded X rows (multiple of q)
+    n: int                      # Theta rows
+    n_data: int                 # simulated devices on the data axis
+    waves: Tuple[Wave, ...]     # shared by both halves of an iteration
+    capacity_bytes: int         # per-device budget the driver meters against
+
+    @property
+    def waves_per_iteration(self) -> int:
+        """Checkpoint steps per iteration: each half walks every wave once."""
+        return 2 * len(self.waves)
+
+    def describe(self) -> str:
+        w = self.waves[0]
+        return (f"waves={len(self.waves)} x {len(w.batches)} batches "
+                f"({w.rows} rows/wave, m_pad={self.m_pad}, n={self.n}, "
+                f"capacity={self.capacity_bytes / GiB:.3f}GiB)")
+
+
+def build_schedule(
+    plan: PartitionPlan,
+    m: int,
+    n: int,
+    *,
+    n_data: Optional[int] = None,
+    capacity_bytes: Optional[int] = None,
+) -> IterationSchedule:
+    """Explicit per-iteration schedule for ``plan`` on an (m x n) problem.
+
+    ``m`` may be the true row count; it is padded up to a multiple of q here
+    so every wave has identical shape (build the RatingStore with the same q
+    and the stores line up).  ``capacity_bytes`` defaults to the plan's own
+    per-device estimate — the budget the driver's memory meter reports
+    against.
+    """
+    if n_data is None:
+        n_data = -(-plan.q // plan.waves)
+    m_pad = -(-m // plan.q) * plan.q
+    groups = export_schedule(plan, m_pad, n_data)
+    waves = tuple(Wave(index=w, batches=g) for w, g in enumerate(groups))
+    assert len(waves) * n_data >= plan.q
+    assert waves[0].row_start == 0 and waves[-1].row_stop == m_pad
+    return IterationSchedule(
+        plan=plan, m_pad=m_pad, n=n, n_data=n_data, waves=waves,
+        capacity_bytes=(plan.bytes_per_device if capacity_bytes is None
+                        else capacity_bytes))
+
+
+def required_capacity_bytes(store, sched: IterationSchedule, f: int,
+                            prefetch_depth: int = 2) -> int:
+    """Per-device bytes the streaming driver will actually keep resident.
+
+    Mirrors the driver's MemoryMeter model exactly: up to ``depth + 2`` wave
+    buffers can be live at once — ``depth`` queued in the Prefetcher, one
+    already materialized by the worker while it blocks on the full queue,
+    and one held by the consuming wave — plus the fixed factor and solve
+    scratch (solve-X half) or the accumulators (accumulate-Theta half).
+    The honest counterpart of the planner's eq. (8) estimate, computed from
+    the store's *real* padding fills.  ``plan_for(fill=store.worst_fill,
+    buffers=prefetch_depth + 2, eps=<accumulator bytes>)`` should dominate
+    this.
+    """
+    n_data = sched.n_data
+    wave_rows = sched.waves[0].rows
+    bufs = prefetch_depth + 2
+    # solve-X half: resident Theta + wave triplets + Hermitian/solve scratch
+    theta_bytes = store.n * f * 4
+    K = store.r.K
+    x_payload = (wave_rows * (K * 8 + 4)) // n_data
+    x_scratch = (wave_rows * (f * f + 2 * f) * 4) // n_data
+    x_half = theta_bytes + bufs * x_payload + x_scratch
+    # accumulate-Theta half: resident A/B/c + per-batch shard + X slice
+    q, n, K_loc = store.rt_parts.idx.shape
+    acc_bytes = n * (f * f + f + 1) * 4
+    t_payload = n * (K_loc * 8 + 4) + (sched.m_pad // q) * f * 4
+    t_half = acc_bytes + bufs * t_payload + n * f * 4
+    return max(x_half, t_half)

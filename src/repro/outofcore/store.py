@@ -1,0 +1,139 @@
+"""Host-resident stores for out-of-core ALS (paper §4.4 "keep R and R^T").
+
+The rating matrix lives in host memory in *both* orientations, pre-cut into
+the shapes the wave driver streams:
+
+- ``RatingStore.r`` — R row-major (rows = users), sliced per wave with
+  ``sparse.padded.row_slice`` for the solve-X half.
+- ``RatingStore.rt_parts`` — R^T column-partitioned into the plan's q
+  user-batches (``partition_padded``), one ``[n, K_loc]`` shard per batch
+  with batch-local user coordinates, for the accumulate-Theta half.
+
+Factors live in ``FactorStore`` as plain numpy arrays; the driver reads
+slices onto device and writes solved slices back, so device memory only ever
+holds the resident factor plus the streaming wave buffers.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import numpy as np
+
+from repro.sparse.padded import (PaddedELL, csr_from_coo, pad_csr_fast,
+                                 pad_rows, partition_padded, row_slice)
+
+Triplet = Tuple[np.ndarray, np.ndarray, np.ndarray]
+
+
+def _triplet(ell: PaddedELL) -> Triplet:
+    # copy=False: the arrays are already int32/float32 out of pad_csr_fast /
+    # partition_padded, and row_slice made the one deliberate copy — a
+    # second astype copy per streamed wave would double host traffic
+    return (ell.idx.astype(np.int32, copy=False),
+            ell.val.astype(np.float32, copy=False),
+            ell.cnt.astype(np.int32, copy=False))
+
+
+def triplet_nbytes(t: Triplet) -> int:
+    return sum(int(a.nbytes) for a in t)
+
+
+@dataclasses.dataclass
+class FactorStore:
+    """Host-resident X [m_pad, f] and Theta [n, f] with slice IO."""
+
+    x: np.ndarray
+    theta: np.ndarray
+
+    @classmethod
+    def from_arrays(cls, x, theta) -> "FactorStore":
+        # np.array (not asarray): jnp inputs arrive as read-only views and
+        # the driver writes solved slices back in place
+        return cls(x=np.array(x, np.float32, order="C"),
+                   theta=np.array(theta, np.float32, order="C"))
+
+    def factor(self, side: str) -> np.ndarray:
+        assert side in ("x", "theta"), side
+        return self.x if side == "x" else self.theta
+
+    def read_slice(self, side: str, start: int, stop: int) -> np.ndarray:
+        return np.ascontiguousarray(self.factor(side)[start:stop])
+
+    def write_slice(self, side: str, start: int, stop: int, rows) -> None:
+        arr = self.factor(side)
+        assert stop - start == len(rows), (start, stop, len(rows))
+        arr[start:stop] = np.asarray(rows, arr.dtype)
+
+    @property
+    def nbytes(self) -> int:
+        return int(self.x.nbytes + self.theta.nbytes)
+
+
+class RatingStore:
+    """R in both orientations, pre-cut for a q-batch wave schedule.
+
+    ``q`` is the plan's number of X-row batches.  Rows are padded with empty
+    rows to ``m_pad`` (the next multiple of q) so every batch — and therefore
+    every wave buffer — has identical shape; padded rows carry cnt = 0 and
+    solve to x_u = 0 without touching Theta.
+    """
+
+    def __init__(self, r: PaddedELL, q: int, k_multiple: int = 8):
+        assert q >= 1
+        self.m = r.m                       # true (unpadded) user count
+        self.n = r.n_cols                  # item count
+        self.q = q
+        self.m_pad = -(-r.m // q) * q
+        self.r = pad_rows(r, self.m_pad)   # rows = users, global item idx
+        # R^T with n_cols = m_pad, column-partitioned into the q user-batches:
+        # shard j holds the nonzeros of users [j*m_pad/q, (j+1)*m_pad/q) with
+        # user coordinates re-based to the batch (eq. 5-7 partitioning, the
+        # q axis instead of p).
+        items, users, vals = self.r.transpose_coo()
+        ptr, cc, vv = csr_from_coo(items, users, vals, self.n)
+        rt = pad_csr_fast(ptr, cc, vv, n_cols=self.m_pad,
+                          k_multiple=k_multiple)
+        self.rt_parts = partition_padded(rt, q, k_multiple=k_multiple)
+
+    @property
+    def nnz(self) -> int:
+        return self.r.nnz
+
+    @property
+    def fill_r(self) -> float:
+        """Padding overhead of the row-major orientation (solve-X waves)."""
+        return self.r.fill
+
+    @property
+    def fill_rt(self) -> float:
+        """Padding overhead of the q-partitioned R^T shards.  Much worse than
+        ``fill_r`` on power-law data: every item row pads to the max in-batch
+        item degree — feed this to ``plan_for(fill=...)`` so the eq. (8)
+        budget prices what the driver actually streams."""
+        q, n, K_loc = self.rt_parts.idx.shape
+        return float(q * n * K_loc) / max(self.nnz, 1)
+
+    @property
+    def worst_fill(self) -> float:
+        return max(self.fill_r, self.fill_rt)
+
+    @property
+    def host_nbytes(self) -> int:
+        return int(self.r.idx.nbytes + self.r.val.nbytes + self.r.cnt.nbytes
+                   + self.rt_parts.idx.nbytes + self.rt_parts.val.nbytes
+                   + self.rt_parts.cnt.nbytes)
+
+    def x_slice_triplet(self, row_start: int, row_stop: int) -> Triplet:
+        """R rows for one solve-X wave slice (global item indices)."""
+        return _triplet(row_slice(self.r, row_start, row_stop))
+
+    def theta_batch_triplet(self, j: int) -> Triplet:
+        """R^T shard of user-batch ``j`` (batch-local user indices).
+
+        Returns host views into the precomputed shard stack (no per-wave
+        copy — the driver only reads them to stage device transfers)."""
+        assert 0 <= j < self.q, (j, self.q)
+        return (self.rt_parts.idx[j].astype(np.int32, copy=False),
+                self.rt_parts.val[j].astype(np.float32, copy=False),
+                self.rt_parts.cnt[j].astype(np.int32, copy=False))

@@ -118,6 +118,46 @@ def pad_csr_fast(ptr: np.ndarray, cols: np.ndarray, vals: np.ndarray,
     return PaddedELL(idx=idx, val=val, cnt=cnt, n_cols=n_cols)
 
 
+def row_slice(ell: PaddedELL, start: int, stop: int) -> PaddedELL:
+    """Host-side contiguous row slice ``ell[start:stop]`` — the wave unit.
+
+    K and ``n_cols`` are preserved (NOT re-tightened to the slice's max
+    degree) so every wave of an out-of-core run presents the same device
+    buffer shape; the cnt/padding/masking invariants carry over unchanged
+    because each row's (idx, val, cnt) triplet is copied verbatim.  Arrays
+    are materialized contiguous: a slice outlives transfers of its parent.
+    """
+    assert 0 <= start <= stop <= ell.m, (start, stop, ell.m)
+    # .copy(), not ascontiguousarray: a row slice of a C-order array is
+    # already contiguous, and ascontiguousarray would hand back a VIEW —
+    # the slice must own its memory so transfers never alias the parent
+    return PaddedELL(
+        idx=ell.idx[start:stop].copy(),
+        val=ell.val[start:stop].copy(),
+        cnt=ell.cnt[start:stop].copy(),
+        n_cols=ell.n_cols,
+    )
+
+
+def pad_rows(ell: PaddedELL, m_to: int) -> PaddedELL:
+    """Append empty rows (cnt = 0, all slots masked) up to ``m_to`` rows.
+
+    Used to round the row count up to a multiple of q so every q-batch has
+    identical shape; padded rows contribute nothing (the masking invariant)
+    and solve to x_u = 0 under the empty-row diagonal fallback.
+    """
+    assert m_to >= ell.m, (m_to, ell.m)
+    extra = m_to - ell.m
+    if extra == 0:
+        return ell
+    return PaddedELL(
+        idx=np.pad(ell.idx, ((0, extra), (0, 0))),
+        val=np.pad(ell.val, ((0, extra), (0, 0))),
+        cnt=np.pad(ell.cnt, (0, extra)),
+        n_cols=ell.n_cols,
+    )
+
+
 def partition_padded(ell: PaddedELL, p: int, k_multiple: int = 8) -> PaddedELL:
     """Column-partition a PaddedELL into ``p`` shards (SU-ALS data parallelism).
 

@@ -1,0 +1,247 @@
+"""Out-of-core wave scheduler: ISSUE-2 acceptance suite.
+
+Fast tests cover the Prefetcher lifecycle regression and the store/schedule
+invariants; the multi-wave end-to-end runs (streaming == in-core oracle,
+capacity, kill/resume) are marked ``slow`` and run in their own CI job.
+"""
+import shutil
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import als as als_mod
+from repro.core.partition import plan_for
+from repro.data.prefetch import Prefetcher
+from repro.outofcore import (RatingStore, SimulatedFailure, build_schedule,
+                             required_capacity_bytes, run_streaming_als)
+from repro.sparse import synth
+
+SPEC = synth.SynthSpec("oc", 96, 40, 1500, 8, 0.05)
+
+
+def _problem(seed=0):
+    return synth.make_synthetic_ratings(SPEC, seed=seed)
+
+
+def _forced_plan(r, q=4, n_data=2, store=None, depth=2):
+    """A waves >= 2 plan on in-core-sized data, priced with the store's real
+    padding fills and the driver's accumulator + double-buffer residents
+    (depth queued + one loader-held + one being consumed)."""
+    fill = store.worst_fill if store is not None else r.fill
+    acc_eps = SPEC.n * (SPEC.f * SPEC.f + 3 * SPEC.f + 1) * 4
+    return plan_for(SPEC.m, SPEC.n, r.nnz, SPEC.f, p=1, q=q, n_data=n_data,
+                    fill=fill, eps=acc_eps, buffers=depth + 2,
+                    hbm_bytes=1 << 22)
+
+
+# ---------------------------------------------------------------------------
+# Prefetcher lifecycle (satellite: abandoning iteration must not leak the
+# worker thread blocked on Queue.put)
+# ---------------------------------------------------------------------------
+
+def _join(pf, timeout=5.0):
+    deadline = time.monotonic() + timeout
+    while pf._thread.is_alive() and time.monotonic() < deadline:
+        time.sleep(0.01)
+    return not pf._thread.is_alive()
+
+
+def test_prefetcher_close_unblocks_worker():
+    pf = Prefetcher(({"x": np.asarray([i])} for i in range(1000)), depth=1)
+    next(pf)                      # worker is now blocked on a full queue
+    pf.close()
+    assert _join(pf), "worker thread leaked after close()"
+    assert pf.closed
+    with pytest.raises(StopIteration):
+        next(pf)
+    pf.close()                    # idempotent
+
+
+def test_prefetcher_context_manager():
+    with Prefetcher(iter(range(1000)), depth=1,
+                    put=lambda x: x) as pf:
+        assert next(pf) == 0
+    assert _join(pf)
+
+
+def test_prefetcher_close_after_exhaustion():
+    pf = Prefetcher(iter(range(3)), depth=2, put=lambda x: x)
+    assert list(pf) == [0, 1, 2]
+    pf.close()
+    assert _join(pf)
+
+
+def test_prefetcher_still_propagates_errors():
+    def boom():
+        yield 1
+        raise ValueError("boom")
+
+    with Prefetcher(boom(), depth=2, put=lambda x: x) as pf:
+        assert next(pf) == 1
+        with pytest.raises(ValueError, match="boom"):
+            next(pf)
+
+
+# ---------------------------------------------------------------------------
+# Store / schedule invariants (fast)
+# ---------------------------------------------------------------------------
+
+def test_rating_store_keeps_both_orientations():
+    r, _, _, _ = _problem()
+    store = RatingStore(r, q=4)
+    assert store.m_pad % 4 == 0 and store.m_pad >= r.m
+    assert store.r.m == store.m_pad
+    # padded rows are empty
+    assert int(store.r.cnt[r.m:].sum()) == 0
+    # the q R^T shards hold exactly the same nonzeros as R
+    assert int(store.rt_parts.cnt.sum()) == r.nnz == store.nnz
+    # shard j only references batch-local user coordinates
+    npp = store.m_pad // 4
+    for j in range(4):
+        idx, val, cnt = store.theta_batch_triplet(j)
+        live = np.arange(idx.shape[1])[None, :] < cnt[:, None]
+        assert live.sum() and idx[live].max() < npp
+    assert store.fill_rt >= 1.0 and store.worst_fill >= store.fill_r
+
+
+def test_rating_store_roundtrips_the_matrix():
+    """Sum of R^T shard j's entries == sum over batch j's rows of R."""
+    r, _, _, _ = _problem()
+    q = 4
+    store = RatingStore(r, q=q)
+    npp = store.m_pad // q
+    for j in range(q):
+        idx, val, cnt = store.x_slice_triplet(j * npp, (j + 1) * npp)
+        live = np.arange(idx.shape[1])[None, :] < cnt[:, None]
+        _, tval, tcnt = store.theta_batch_triplet(j)
+        tlive = np.arange(tval.shape[1])[None, :] < tcnt[:, None]
+        assert int(cnt.sum()) == int(tcnt.sum())
+        np.testing.assert_allclose(val[live].sum(), tval[tlive].sum(),
+                                   rtol=1e-5)
+
+
+def test_build_schedule_covers_rows_once():
+    r, _, _, _ = _problem()
+    store = RatingStore(r, q=4)
+    plan = _forced_plan(r, q=4, n_data=2, store=store)
+    sched = build_schedule(plan, SPEC.m, SPEC.n, n_data=2)
+    assert plan.waves == len(sched.waves) == 2
+    assert sched.m_pad == store.m_pad
+    covered = np.zeros(sched.m_pad, np.int32)
+    for wave in sched.waves:
+        for b in wave.batches:
+            covered[b.row_start:b.row_stop] += 1
+    assert (covered == 1).all()
+    assert required_capacity_bytes(store, sched, SPEC.f) > 0
+
+
+def test_streaming_ragged_last_wave():
+    """q not divisible by n_data: the last wave carries fewer batches and its
+    per-device metering divides by the actual batch count."""
+    r, rt, rte, _ = _problem()
+    cfg = als_mod.AlsConfig(f=SPEC.f, lam=SPEC.lam, iters=1, mode="ref")
+    rr, rtt, rtest = (als_mod.ell_triplet(e) for e in (r, rt, rte))
+    _, hist = als_mod.als_train(rr, rtt, r.m, rt.m, cfg)
+
+    store = RatingStore(r, q=3)
+    plan = _forced_plan(r, q=3, n_data=2, store=store)
+    sched = build_schedule(plan, SPEC.m, SPEC.n, n_data=2)
+    assert len(sched.waves) == 2 and len(sched.waves[-1].batches) == 1
+    _, shist, tel = run_streaming_als(store, sched, cfg, train_eval=rr)
+    assert abs(shist[-1]["train_rmse"] - hist[-1]["train_rmse"]) < 1e-4
+    assert tel.peak_bytes <= tel.capacity_bytes
+
+
+# ---------------------------------------------------------------------------
+# End-to-end multi-wave runs (slow lane)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_streaming_matches_incore_rmse():
+    """Acceptance: forced waves >= 2 streaming == in-core als_run to 1e-4,
+    and the peak simulated device footprint respects the plan's budget."""
+    r, rt, rte, _ = _problem()
+    cfg = als_mod.AlsConfig(f=SPEC.f, lam=SPEC.lam, iters=3, mode="ref")
+    rr, rtt, rtest = (als_mod.ell_triplet(e) for e in (r, rt, rte))
+    _, hist = als_mod.als_train(rr, rtt, r.m, rt.m, cfg, test=rtest)
+
+    store = RatingStore(r, q=4)
+    plan = _forced_plan(r, q=4, n_data=2, store=store)
+    assert plan.waves >= 2
+    sched = build_schedule(plan, SPEC.m, SPEC.n, n_data=2)
+    _, shist, tel = run_streaming_als(store, sched, cfg, train_eval=rr,
+                                      test_eval=rtest)
+
+    assert len(shist) == len(hist)
+    for a, b in zip(shist, hist):
+        assert abs(a["train_rmse"] - b["train_rmse"]) < 1e-4
+        assert abs(a["test_rmse"] - b["test_rmse"]) < 1e-4
+    # memory: under the plan's per-device budget, and genuinely streaming
+    # (well below holding the whole padded problem resident)
+    assert tel.peak_bytes <= tel.capacity_bytes
+    in_core_bytes = store.host_nbytes + (store.m_pad + store.n) * SPEC.f * 4
+    assert tel.peak_bytes < in_core_bytes
+    assert tel.waves_run == 2 * len(sched.waves) * cfg.iters
+
+
+@pytest.mark.slow
+def test_wave_update_fn_on_mesh_matches_oracle():
+    """`distributed.su_als.make_wave_update_fn` — the driver's hook for
+    running a wave slice on a real mesh — must match the single-device
+    per-slice solve.  Runs in a subprocess with 8 forced host devices
+    (same harness as test_distributed)."""
+    from test_distributed import run_script
+    run_script("""
+import numpy as np, jax.numpy as jnp
+from repro.launch.mesh import make_mesh
+from repro.sparse import synth, padded
+from repro.distributed.su_als import make_wave_update_fn
+from repro.kernels import ops as kops
+
+mesh = make_mesh((4, 2), ("data", "model"))
+spec = synth.SynthSpec("oc", 64, 16, 600, 8, 0.05)
+r, _, _, _ = synth.make_synthetic_ratings(spec, seed=0)
+parts = padded.partition_padded(r, 2)       # model-axis column shards
+P, m, K = parts.idx.shape
+idx = np.transpose(parts.idx, (1, 0, 2)).reshape(m, P * K)[:32]
+val = np.transpose(parts.val, (1, 0, 2)).reshape(m, P * K)[:32]
+cnt = np.transpose(parts.cnt, (1, 0)).reshape(m, P)[:32]
+theta = np.random.default_rng(0).standard_normal((16, 8)).astype(np.float32)
+
+out = make_wave_update_fn(mesh, lam=0.05, mode="ref")(theta, idx, val, cnt)
+ref = np.asarray(kops.als_update_factor(
+    jnp.asarray(theta), jnp.asarray(r.idx[:32]), jnp.asarray(r.val[:32]),
+    jnp.asarray(r.cnt[:32]), 0.05))
+assert out.shape == (32, 8), out.shape
+assert np.abs(out - ref).max() < 1e-4, np.abs(out - ref).max()
+print("wave update on mesh OK")
+""")
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("kill_after", [1, 3])
+def test_kill_and_resume_reaches_same_result(tmp_path, kill_after):
+    """Acceptance: a run killed after wave ``kill_after`` (1 = first solve-X
+    wave, 3 = mid accumulate-Theta) resumes from checkpoint to the same
+    final factors."""
+    r, _, _, _ = _problem()
+    cfg = als_mod.AlsConfig(f=SPEC.f, lam=SPEC.lam, iters=2, mode="ref")
+    rr = als_mod.ell_triplet(r)
+    store = RatingStore(r, q=4)
+    plan = _forced_plan(r, q=4, n_data=2, store=store)
+    sched = build_schedule(plan, SPEC.m, SPEC.n, n_data=2)
+
+    ref_fac, ref_hist, _ = run_streaming_als(store, sched, cfg, train_eval=rr)
+
+    ckpt = str(tmp_path / "ckpt")
+    shutil.rmtree(ckpt, ignore_errors=True)
+    with pytest.raises(SimulatedFailure):
+        run_streaming_als(store, sched, cfg, ckpt_dir=ckpt, train_eval=rr,
+                          fail_after_waves=kill_after)
+    fac, hist, tel = run_streaming_als(store, sched, cfg, ckpt_dir=ckpt,
+                                       train_eval=rr)
+    assert tel.resumed_from_step == kill_after
+    assert abs(hist[-1]["train_rmse"] - ref_hist[-1]["train_rmse"]) < 1e-4
+    np.testing.assert_allclose(fac.x, ref_fac.x, atol=1e-5)
+    np.testing.assert_allclose(fac.theta, ref_fac.theta, atol=1e-5)

@@ -3,7 +3,8 @@ import numpy as np
 import pytest
 from _propcheck import given, settings, strategies as st
 
-from repro.core.partition import plan_partitions
+from repro.core.partition import (batch_ranges, export_schedule, plan_for,
+                                  plan_partitions)
 from repro.sparse import padded, synth
 
 
@@ -94,3 +95,109 @@ def test_planner_monotone_in_hbm():
     small = plan_partitions(s.m, s.n, s.nnz, s.f, hbm_bytes=8 << 30)
     big = plan_partitions(s.m, s.n, s.nnz, s.f, hbm_bytes=64 << 30)
     assert small.q >= big.q
+
+
+# ---------------------------------------------------------------------------
+# row_slice / pad_rows: the out-of-core wave unit must preserve the
+# cnt/padding/masking invariants (ISSUE 2 satellite)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=10, deadline=None)
+@given(m=st.integers(4, 32), n=st.integers(4, 32),
+       nnz=st.integers(1, 200), seed=st.integers(0, 1000))
+def test_row_slice_preserves_invariants(m, n, nnz, seed):
+    rng = np.random.default_rng(seed)
+    rows, cols, vals = _random_coo(rng, m, n, nnz)
+    ptr, cc, vv = padded.csr_from_coo(rows, cols, vals, m)
+    ell = padded.pad_csr_fast(ptr, cc, vv, n)
+    dense = _to_dense(ell)
+    lo, hi = m // 4, max(m // 4, m - m // 4)
+    sl = padded.row_slice(ell, lo, hi)
+    # shape/layout invariants: K and n_cols survive, rows match the range
+    assert sl.K == ell.K and sl.n_cols == ell.n_cols and sl.m == hi - lo
+    np.testing.assert_array_equal(sl.cnt, ell.cnt[lo:hi])
+    # masking invariant: slots at position >= cnt carry idx = 0, val = 0
+    dead = ~sl.mask().astype(bool)
+    assert (sl.idx[dead] == 0).all() and (sl.val[dead] == 0).all()
+    # round trip against the dense reference
+    np.testing.assert_allclose(_to_dense(sl), dense[lo:hi], atol=1e-6)
+    # slices are copies: mutating one must not alias the parent
+    if sl.m and sl.K:
+        sl.val[0, 0] += 1.0
+        np.testing.assert_allclose(_to_dense(ell), dense, atol=1e-6)
+
+
+def test_row_slice_edge_ranges():
+    rng = np.random.default_rng(0)
+    rows, cols, vals = _random_coo(rng, 8, 8, 30)
+    ptr, cc, vv = padded.csr_from_coo(rows, cols, vals, 8)
+    ell = padded.pad_csr_fast(ptr, cc, vv, 8)
+    assert padded.row_slice(ell, 0, 8).m == 8
+    assert padded.row_slice(ell, 3, 3).m == 0
+    with pytest.raises(AssertionError):
+        padded.row_slice(ell, 0, 9)
+
+
+def test_pad_rows_appends_empty_rows():
+    rng = np.random.default_rng(1)
+    rows, cols, vals = _random_coo(rng, 10, 8, 40)
+    ptr, cc, vv = padded.csr_from_coo(rows, cols, vals, 10)
+    ell = padded.pad_csr_fast(ptr, cc, vv, 8)
+    p = padded.pad_rows(ell, 16)
+    assert p.m == 16 and p.nnz == ell.nnz
+    assert (p.cnt[10:] == 0).all()
+    np.testing.assert_allclose(_to_dense(p)[:10], _to_dense(ell), atol=1e-6)
+    assert padded.pad_rows(ell, 10) is ell
+
+
+# ---------------------------------------------------------------------------
+# Wave math (ISSUE 2 satellite): the exported schedule covers every row
+# exactly once per iteration, and waves * data_axis >= q
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(m=st.integers(1, 500), q=st.integers(1, 32),
+       n_data=st.integers(1, 8))
+def test_export_schedule_covers_rows_exactly_once(m, q, n_data):
+    plan = plan_for(m, 64, 10 * m, 8, p=1, q=q, n_data=n_data)
+    waves = export_schedule(plan, m, n_data)
+    assert len(waves) * n_data >= q
+    assert len(waves) == -(-q // n_data) == plan.waves
+    covered = np.zeros(m, np.int32)
+    seen_batches = []
+    for wave in waves:
+        assert 1 <= len(wave) <= n_data
+        for b in wave:
+            covered[b.row_start:b.row_stop] += 1
+            seen_batches.append(b.index)
+    assert (covered == 1).all()
+    assert seen_batches == list(range(q))
+
+
+@settings(max_examples=10, deadline=None)
+@given(m=st.integers(1, 300), q=st.integers(1, 16))
+def test_batch_ranges_balanced(m, q):
+    batches = batch_ranges(m, q)
+    sizes = [b.rows for b in batches]
+    assert sum(sizes) == m and len(batches) == q
+    assert max(sizes) - min(sizes) <= 1
+    assert batches[0].row_start == 0 and batches[-1].row_stop == m
+
+
+def test_waves_cover_q_for_plans_that_dont_fit():
+    """A plan that does not fit still exports a q-covering wave schedule."""
+    s = synth.DATASETS["yahoomusic"]
+    plan = plan_for(s.m, s.n, s.nnz, s.f, p=1, q=64, n_data=4,
+                    hbm_bytes=1 << 20)
+    assert not plan.fits
+    assert plan.waves * 4 >= plan.q
+    waves = export_schedule(plan, s.m, 4)
+    assert len(waves) == plan.waves
+    assert waves[-1][-1].row_stop == s.m
+
+
+def test_export_schedule_default_ndata_reconstructs_plan_waves():
+    plan = plan_for(1000, 64, 5000, 8, p=1, q=8, n_data=2)
+    assert plan.waves == 4
+    waves = export_schedule(plan, 1000)
+    assert len(waves) == plan.waves
