@@ -20,6 +20,8 @@ from repro.sparse.synth import DATASETS
 
 from benchmarks.common import emit
 
+JSON_OUT = "BENCH_outofcore.json"   # run.py serializes run()'s records here
+
 V5E_CHIP_HR_USD = 1.20      # on-demand list-ish price per chip-hour
 PAPER_BASELINES = {         # per-iteration seconds + cluster cost, Table 1/§5.5
     "sparkals": (240.0, 50 * 0.53),     # SparkALS: 240 s/iter, 50 x m3.2xlarge

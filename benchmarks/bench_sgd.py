@@ -1,0 +1,80 @@
+"""ALS vs SGD vs hybrid: epochs/sec and RMSE-vs-wall-clock (CuMF_SGD's
+Fig. 7 protocol — "time to RMSE", not per-iteration flops) on the scaled
+planted-Netflix recipe.
+
+Each solver runs to convergence-ish on identical data; every epoch (ALS
+iteration / SGD epoch) appends a (cumulative seconds, test RMSE) point.
+The records land in BENCH_sgd.json via ``benchmarks/run.py``'s generic
+JSON path.
+"""
+from __future__ import annotations
+
+import time
+
+from repro.core import als as als_mod
+from repro.sgd import SgdConfig, block_ell, hybrid_train, sgd_train
+from repro.sparse import synth
+
+from benchmarks.common import emit
+
+JSON_OUT = "BENCH_sgd.json"
+
+
+def _timed_curve():
+    """A callback capturing (cumulative wall seconds, test rmse) per epoch."""
+    t0 = time.perf_counter()
+    points: list[dict] = []
+
+    def cb(_state, rec):
+        points.append({"t": time.perf_counter() - t0,
+                       "rmse": rec.get("test_rmse")})
+
+    return points, cb
+
+
+def run():
+    spec = synth.SynthSpec("netflix-mini", m=1536, n=256, nnz=90_000,
+                           f=16, lam=0.05)
+    r, rt, rte, _ = synth.make_synthetic_ratings(spec, seed=3, noise=0.1)
+    rr, rtt, rtest = (als_mod.ell_triplet(e) for e in (r, rt, rte))
+    grid = block_ell(r, g=4)
+
+    records = []
+
+    def record(solver, points, epochs):
+        total = points[-1]["t"] if points else 0.0
+        rec = {
+            "solver": solver, "m": spec.m, "n": spec.n, "nnz": r.nnz,
+            "f": spec.f, "g": grid.g, "epochs": epochs,
+            "final_rmse": points[-1]["rmse"] if points else None,
+            "epochs_per_sec": epochs / total if total else None,
+            "curve": points,
+        }
+        records.append(rec)
+        emit(f"sgd_vs_als_{solver}", total / max(epochs, 1) * 1e6,
+             f"final_rmse={rec['final_rmse']:.4f};"
+             f"epochs_per_sec={rec['epochs_per_sec']:.2f}")
+        return rec
+
+    als_cfg = als_mod.AlsConfig(f=spec.f, lam=spec.lam, iters=8, mode="ref")
+    points, cb = _timed_curve()
+    als_mod.als_train(rr, rtt, r.m, rt.m, als_cfg, test=rtest, callback=cb)
+    record("als", points, als_cfg.iters)
+
+    sgd_cfg = SgdConfig(f=spec.f, lam=spec.lam, lr=0.15, epochs=40,
+                        schedule="cosine", mode="ref", seed=1)
+    points, cb = _timed_curve()
+    sgd_train(grid, sgd_cfg, test=rtest, callback=cb)
+    record("sgd", points, sgd_cfg.epochs)
+
+    warm_cfg = als_mod.AlsConfig(f=spec.f, lam=spec.lam, iters=2, mode="ref")
+    ref_cfg = SgdConfig(f=spec.f, lam=spec.lam, lr=0.15, epochs=24,
+                        schedule="cosine", mode="ref", seed=1)
+    points, cb = _timed_curve()   # hybrid_train forwards cb to both phases
+    hybrid_train(rr, rtt, grid, warm_cfg, ref_cfg, test=rtest, callback=cb)
+    record("hybrid", points, warm_cfg.iters + ref_cfg.epochs)
+    return records
+
+
+if __name__ == "__main__":
+    run()

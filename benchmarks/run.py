@@ -1,40 +1,82 @@
 """Benchmark entry point: one function per paper table/figure.
-Prints ``name,us_per_call,derived`` CSV lines; the measured out-of-core
-streaming records from bench_huge additionally land in BENCH_outofcore.json.
+
+Prints ``name,us_per_call,derived`` CSV lines.  Any module that declares
+a ``JSON_OUT`` filename has its ``run()`` return value serialized there —
+one generic path, so BENCH_outofcore.json (bench_huge) and BENCH_sgd.json
+(bench_sgd) flow identically and new JSON emitters need no run.py edits.
+
+Selection::
+
+    python benchmarks/run.py                      # everything
+    python benchmarks/run.py --quick              # fast subset
+    python benchmarks/run.py --only convergence --only sgd
+
+``--only`` takes the short names below (repeatable) and composes with
+nothing else; unknown names fail loudly rather than silently skipping
+(the old ``--quick`` truncated the module list and never reached the
+JSON-emitting modules).
 """
 from __future__ import annotations
 
+import argparse
+import importlib
 import json
+import os
 import sys
 
-OUTOFCORE_JSON = "BENCH_outofcore.json"
+# make ``python benchmarks/run.py`` work from anywhere: the repo root (the
+# parent of this file's directory) must be importable for ``benchmarks.*``
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+if _ROOT not in sys.path:
+    sys.path.insert(0, _ROOT)
+
+# short name -> module; order is the full-run execution order
+MODULES = [
+    ("convergence", "bench_convergence"),            # Fig. 6
+    ("register_ablation", "bench_register_ablation"),  # Fig. 7
+    ("texture", "bench_texture"),                    # Fig. 8
+    ("scaling", "bench_scaling"),                    # Fig. 9/10
+    ("huge", "bench_huge"),                          # Fig. 11 + out-of-core
+    ("reduction", "bench_reduction"),                # Fig. 5
+    ("kernels", "bench_kernels"),                    # kernel-level fusion
+    ("lm_substrate", "bench_lm_substrate"),          # LM substrate overhead
+    ("sgd", "bench_sgd"),                            # ALS vs SGD vs hybrid
+]
+QUICK = ("convergence", "register_ablation")
 
 
-def main() -> None:
-    from benchmarks import (bench_convergence, bench_register_ablation,
-                            bench_texture, bench_scaling, bench_huge,
-                            bench_kernels, bench_reduction,
-                            bench_lm_substrate)
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true",
+                    help=f"run only the fast subset: {', '.join(QUICK)}")
+    ap.add_argument("--only", action="append", default=[], metavar="NAME",
+                    help="run only the named benchmark (repeatable); "
+                         f"names: {', '.join(n for n, _ in MODULES)}")
+    args = ap.parse_args(argv)
+
+    known = {n for n, _ in MODULES}
+    unknown = [n for n in args.only if n not in known]
+    if unknown:
+        ap.error(f"unknown benchmark name(s) {unknown}; "
+                 f"choose from {sorted(known)}")
+    if args.only:
+        selected = set(args.only)
+    elif args.quick:
+        selected = set(QUICK)
+    else:
+        selected = known
+
     print("name,us_per_call,derived")
-    mods = [
-        bench_convergence,       # Fig. 6
-        bench_register_ablation, # Fig. 7
-        bench_texture,           # Fig. 8
-        bench_scaling,           # Fig. 9/10
-        bench_huge,              # Fig. 11 + Table 1 + measured out-of-core
-        bench_reduction,         # Fig. 5
-        bench_kernels,           # kernel-level (beyond-paper fusion)
-        bench_lm_substrate,      # LM substrate overhead
-    ]
-    if "--quick" in sys.argv:
-        mods = mods[:2]
-    for m in mods:
-        out = m.run()
-        if m is bench_huge and out:
-            with open(OUTOFCORE_JSON, "w") as f:
+    for name, modname in MODULES:
+        if name not in selected:
+            continue
+        mod = importlib.import_module(f"benchmarks.{modname}")
+        out = mod.run()
+        json_out = getattr(mod, "JSON_OUT", None)
+        if json_out and out:
+            with open(json_out, "w") as f:
                 json.dump(out, f, indent=2)
-            print(f"# wrote {len(out)} measured streaming records to "
-                  f"{OUTOFCORE_JSON}", flush=True)
+            print(f"# wrote {len(out)} records to {json_out}", flush=True)
 
 
 if __name__ == '__main__':

@@ -16,6 +16,25 @@ shards while the previous one computes, checkpointing per wave:
 
     PYTHONPATH=src python examples/train_als_netflix.py --small \
         --out-of-core --device-mb 8
+
+Solver selection (``--solver {als,sgd,hybrid}``):
+
+- ``als``    (default) — the paper's memory-optimized ALS: each sweep is a
+  closed-form fused-Hermitian + batched-Cholesky solve.  Most progress per
+  iteration, most expensive per iteration.
+- ``sgd``    — CuMF_SGD-style blocked batch-Hogwild SGD: the ratings are
+  partitioned into a ``--g`` x ``--g`` block grid and each epoch walks the
+  g conflict-free diagonal block-sets.  Much cheaper per epoch (no f^2
+  Hermitian, no solves); needs more epochs and an lr schedule
+  (``--sgd-lr``, cosine by default).
+- ``hybrid`` — ALS warm start (``--iters`` sweeps) then SGD refinement
+  (``--epochs``) on the same shards: ALS's fast early convergence at its
+  per-iteration price only while it pays, then cheap SGD epochs to the
+  floor.
+
+    PYTHONPATH=src python examples/train_als_netflix.py --small --solver sgd
+    PYTHONPATH=src python examples/train_als_netflix.py --small \
+        --solver hybrid --iters 2 --epochs 16
 """
 import argparse
 import os
@@ -75,11 +94,60 @@ def run_out_of_core(spec, r, rte, args):
           f"waves; checkpoints in {args.ckpt}")
 
 
+def run_sgd(spec, r, rt, rte, args):
+    """Blocked batch-Hogwild SGD / ALS->SGD hybrid (see module docstring)."""
+    from repro.core import als as als_mod
+    from repro.sgd import SgdConfig, block_ell, hybrid_train, sgd_train
+
+    grid = block_ell(r, g=args.g)
+    print(f"block grid: g={grid.g} mb={grid.mb} nb={grid.nb} K={grid.K} "
+          f"fill={grid.fill:.2f}x")
+    sgd_cfg = SgdConfig(f=spec.f, lam=spec.lam, lr=args.sgd_lr,
+                        epochs=args.epochs, schedule=args.schedule,
+                        mode="ref")
+    # solver-scoped checkpoint dir: the ALS / out-of-core paths write
+    # differently-shaped trees into args.ckpt, and resuming a finished
+    # run must not be misread as a fresh one
+    ckpt = os.path.join(args.ckpt, args.solver)
+    rtest = als_mod.ell_triplet(rte)
+
+    def progress(_state, rec):
+        tag = rec.get("phase", "sgd")
+        step = rec.get("epoch", rec.get("iteration"))
+        lr = f"  lr={rec['lr']:.4f}" if "lr" in rec else ""
+        print(f"{tag} {step:3d}  "
+              f"test_rmse={rec.get('test_rmse', float('nan')):.4f}{lr}",
+              flush=True)
+
+    t0 = time.time()
+    if args.solver == "hybrid":
+        warm = als_mod.AlsConfig(f=spec.f, lam=spec.lam, iters=args.iters,
+                                 mode="ref", batch_rows=16_384)
+        rr, rtt = als_mod.ell_triplet(r), als_mod.ell_triplet(rt)
+        _, hist = hybrid_train(rr, rtt, grid, warm, sgd_cfg, test=rtest,
+                               ckpt_dir=ckpt, callback=progress)
+    else:
+        _, hist = sgd_train(grid, sgd_cfg, test=rtest, ckpt_dir=ckpt,
+                            callback=progress)
+    final = (f"final test_rmse={hist[-1]['test_rmse']:.4f}" if hist
+             else f"already complete at epoch {sgd_cfg.epochs} (resume)")
+    print(f"done in {time.time()-t0:.1f}s; {final}; checkpoints in {ckpt}")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--small", action="store_true")
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--iters", type=int, default=6)
+    ap.add_argument("--solver", choices=("als", "sgd", "hybrid"),
+                    default="als", help="see module docstring")
+    ap.add_argument("--epochs", type=int, default=30,
+                    help="SGD epochs (sgd / hybrid solvers)")
+    ap.add_argument("--sgd-lr", type=float, default=0.15)
+    ap.add_argument("--schedule", default="cosine",
+                    choices=("constant", "inverse_time", "cosine"))
+    ap.add_argument("--g", type=int, default=4,
+                    help="block-grid side for the SGD solvers")
     ap.add_argument("--ckpt", default="/tmp/cumf_ckpt")
     ap.add_argument("--out-of-core", action="store_true",
                     help="stream waves through a capped simulated device")
@@ -109,6 +177,9 @@ def main():
 
     if args.out_of_core:
         run_out_of_core(spec, r, rte, args)
+        return
+    if args.solver != "als":
+        run_sgd(spec, r, rt, rte, args)
         return
 
     cfg = als_mod.AlsConfig(f=spec.f, lam=spec.lam, iters=1, mode="ref",

@@ -34,6 +34,9 @@ def main():
     ap.add_argument("--width", type=int, default=0)
     ap.add_argument("--layers", type=int, default=0)
     ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--schedule", default="constant",
+                    choices=("constant", "inverse_time", "cosine"),
+                    help="lr schedule over --steps (training/optimizer)")
     ap.add_argument("--microbatch", type=int, default=2)
     ap.add_argument("--ckpt", default="")
     args = ap.parse_args()
@@ -49,7 +52,8 @@ def main():
     n_params = cfg.params_count()
     print(f"arch={args.arch} params={n_params/1e6:.1f}M vocab={cfg.vocab}")
 
-    opt = OptConfig(lr=args.lr)
+    opt = OptConfig(lr=args.lr, schedule=args.schedule,
+                    schedule_steps=args.steps)
     state = lm_mod.init_train_state(cfg, jax.random.PRNGKey(0), opt)
     step = jax.jit(lm_mod.make_train_step(
         cfg, opt, microbatch=args.microbatch, remat=False))

@@ -51,3 +51,49 @@ def fused_herm_gathered_ref(theta, idx, val, cnt, lam):
     mask = mask_from_cnt(cnt, idx.shape[1], theta.dtype)
     diag = jnp.where(cnt > 0, lam * cnt.astype(jnp.float32), 1.0)
     return herm_ref(g, val, mask, diag)
+
+
+def sgd_block_ref(
+    x: jax.Array,      # [mb, f]  user factors of this user block
+    theta: jax.Array,  # [nb, f]  item factors of this item block
+    idx: jax.Array,    # [mb, K]  block-local item index per slot (0 in padding)
+    val: jax.Array,    # [mb, K]  rating (0 in padding)
+    cnt: jax.Array,    # [mb]     true nnz per user row
+    lr: jax.Array,     # scalar   learning rate
+    lam: float,
+) -> tuple[jax.Array, jax.Array]:
+    """Oracle for the batch-Hogwild block update (CuMF_SGD, one tile).
+
+    The K ELL slots are processed sequentially; within one slot all mb
+    user rows update concurrently (the "batch" of batch-Hogwild).  Users
+    are disjoint by construction; item collisions inside a slot are
+    determinized as the *mean* of the colliding per-sample gradients
+    (mini-batch semantics), all computed against the pre-slot factors:
+
+        e      = r_uv - <x_u, theta_v>
+        x_u   += lr * (e * theta_v - lam * x_u)
+        th_v  += lr * (mean_{u in slot hits v} e * x_u - lam * theta_v)
+
+    Averaging (not summing) the collisions is load-bearing: a power-law
+    popular item can be hit by thousands of rows in one slot, and the
+    summed update diverges at any useful lr.
+    """
+    K = idx.shape[1]
+    nb = theta.shape[0]
+    mask = mask_from_cnt(cnt, K, x.dtype)
+
+    def slot(k, carry):
+        x, th = carry
+        iv = idx[:, k]                       # [mb]
+        msk = mask[:, k]                     # [mb]
+        tv = jnp.take(th, iv, axis=0)        # [mb, f]
+        e = (val[:, k] - jnp.sum(x * tv, axis=-1)) * msk
+        dx = msk[:, None] * (e[:, None] * tv - lam * x)
+        num = jnp.zeros_like(th).at[iv].add(
+            msk[:, None] * (e[:, None] * x))        # [nb, f] grad sums
+        hits = jnp.zeros((nb,), x.dtype).at[iv].add(msk)
+        dt = num / jnp.maximum(hits, 1.0)[:, None] \
+            - lam * th * (hits > 0)[:, None]
+        return x + lr * dx, th + lr * dt
+
+    return jax.lax.fori_loop(0, K, slot, (x, theta))

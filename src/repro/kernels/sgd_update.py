@@ -1,0 +1,167 @@
+"""Pallas TPU kernel: batch-Hogwild SGD update over one rating tile.
+
+CuMF_SGD keeps a (user-block, item-block) tile's factor slices resident
+while a thread block sweeps its samples.  The TPU analogue:
+
+- ``x [mb, f]`` and ``theta [nb, f]`` live in VMEM scratch across the
+  entire ELL-slot grid dimension and are written back to HBM exactly
+  once per tile (the same register-file re-homing as the hermitian
+  kernel's accumulator);
+- the grid walks the K padded ELL slots ("arbitrary" semantics — the
+  factor carry serializes them); one grid step updates all mb user rows
+  concurrently, which is the batch of batch-Hogwild;
+- the in-slot theta gather *and* scatter are both expressed as one-hot
+  MXU matmuls (``P @ theta`` / ``P^T @ contrib`` with ``P [mb, nb]`` the
+  slot's item-selection one-hot) — a systolic array wants matmuls, not
+  per-row scatter ops — and item collisions inside a slot are resolved
+  as the *mean* of the colliding gradients, exactly matching the oracle
+  (``ref.sgd_block_ref``; summing instead diverges on power-law items).
+
+The public wrapper pads mb/nb/f/K to tile multiples and dispatches
+ref | kernel | kernel_interpret like the other ops; compilation is
+routed through ``compat.pallas_call`` so CPU hosts degrade to the
+interpreter.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro import compat
+from repro.kernels import ref as kref
+from repro.kernels.ops import _pad_axis, _round_up
+
+
+def _sgd_tile_kernel(lr_ref, idx_ref, val_ref, mask_ref, x0_ref, t0_ref,
+                     x_out, t_out, acc_x, acc_t, *, lam: float,
+                     n_slots: int):
+    """One ELL-slot grid step over a full tile."""
+    k = pl.program_id(0)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_x[...] = x0_ref[...]
+        acc_t[...] = t0_ref[...]
+
+    x = acc_x[...]                            # [mb, f]
+    th = acc_t[...]                           # [nb, f]
+    lr = lr_ref[0, 0]
+    iv = idx_ref[...]                         # [mb, 1]
+    msk = mask_ref[...][:, 0]                 # [mb]
+    nb = th.shape[0]
+    # one-hot item selector for this slot: [mb, nb]
+    lanes = jax.lax.broadcasted_iota(jnp.int32, (iv.shape[0], nb), 1)
+    onehot = (lanes == iv).astype(jnp.float32) * msk[:, None]
+    tv = jax.lax.dot_general(                 # gather: [mb, f]
+        onehot, th, dimension_numbers=(((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    e = (val_ref[...][:, 0] - jnp.sum(x * tv, axis=-1)) * msk
+    dx = msk[:, None] * (e[:, None] * tv - lam * x)
+    acc_x[...] = x + lr * dx
+    # theta side: mean of the colliding per-sample grads (see ref oracle),
+    # both the grad sum and the collision count via one-hot MXU matmuls
+    num = jax.lax.dot_general(                # scatter-sum: [nb, f]
+        onehot, e[:, None] * x,
+        dimension_numbers=(((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    hits = jnp.sum(onehot, axis=0)            # [nb]
+    dt = num / jnp.maximum(hits, 1.0)[:, None] \
+        - lam * th * (hits > 0).astype(jnp.float32)[:, None]
+    acc_t[...] = th + lr * dt
+
+    @pl.when(k == n_slots - 1)
+    def _epilogue():
+        x_out[...] = acc_x[...]
+        t_out[...] = acc_t[...]
+
+
+def sgd_tile_pallas(
+    x: jax.Array,      # [mb, f]
+    theta: jax.Array,  # [nb, f]
+    idx: jax.Array,    # [mb, K] int32
+    val: jax.Array,    # [mb, K]
+    mask: jax.Array,   # [mb, K]
+    lr: jax.Array,     # [1, 1]
+    *,
+    lam: float,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    """Batch-Hogwild tile sweep; see module doc.  Shapes must be pre-padded."""
+    mb, K = idx.shape
+    nb, f = theta.shape
+    kernel = functools.partial(_sgd_tile_kernel, lam=lam, n_slots=K)
+    return compat.pallas_call(
+        kernel,
+        grid=(K,),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda k: (0, 0)),       # lr
+            pl.BlockSpec((mb, 1), lambda k: (0, k)),      # idx slot
+            pl.BlockSpec((mb, 1), lambda k: (0, k)),      # val slot
+            pl.BlockSpec((mb, 1), lambda k: (0, k)),      # mask slot
+            pl.BlockSpec((mb, f), lambda k: (0, 0)),      # x0
+            pl.BlockSpec((nb, f), lambda k: (0, 0)),      # theta0
+        ],
+        out_specs=(
+            pl.BlockSpec((mb, f), lambda k: (0, 0)),
+            pl.BlockSpec((nb, f), lambda k: (0, 0)),
+        ),
+        out_shape=(
+            jax.ShapeDtypeStruct((mb, f), jnp.float32),
+            jax.ShapeDtypeStruct((nb, f), jnp.float32),
+        ),
+        scratch_shapes=[
+            compat.vmem((mb, f), jnp.float32),   # resident x — the tile carry
+            compat.vmem((nb, f), jnp.float32),   # resident theta
+        ],
+        compiler_params=compat.tpu_compiler_params(
+            dimension_semantics=("arbitrary",),
+        ),
+        interpret=interpret,
+    )(lr, idx, val, mask, x, theta)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("lam", "mode", "row_mult", "col_mult", "f_mult"))
+def sgd_block_update(
+    x: jax.Array,      # [mb, f]  user-block factor slice
+    theta: jax.Array,  # [nb, f]  item-block factor slice
+    idx: jax.Array,    # [mb, K]  block-local item indices
+    val: jax.Array,    # [mb, K]
+    cnt: jax.Array,    # [mb]
+    lr: jax.Array,     # scalar learning rate (traced: no retrace per epoch)
+    lam: float,
+    *,
+    mode: str = "ref",
+    row_mult: int = 8,
+    col_mult: int = 128,
+    f_mult: int = 128,
+) -> tuple[jax.Array, jax.Array]:
+    """One batch-Hogwild sweep over a tile; returns (x', theta').
+
+    Padding is semantics-free by construction: padded ELL slots and
+    padded user rows are masked out, padded theta rows are never
+    selected (real ``idx < nb``), and padded feature columns start at 0
+    and stay 0 under the multiplicative update.
+    """
+    mb, K = idx.shape
+    nb, f = theta.shape
+    lr = jnp.asarray(lr, jnp.float32)
+    if mode == "ref":
+        return kref.sgd_block_ref(x, theta, idx, val, cnt, lr, lam)
+    mask = kref.mask_from_cnt(cnt, K, x.dtype)
+    mbp = _round_up(mb, row_mult)
+    nbp = _round_up(nb, col_mult)
+    fp = _round_up(f, f_mult)
+    x_p = _pad_axis(_pad_axis(x, 1, fp), 0, mbp)
+    t_p = _pad_axis(_pad_axis(theta, 1, fp), 0, nbp)
+    idx_p = _pad_axis(idx.astype(jnp.int32), 0, mbp)
+    val_p = _pad_axis(val, 0, mbp)
+    mask_p = _pad_axis(mask, 0, mbp)
+    x_new, t_new = sgd_tile_pallas(
+        x_p, t_p, idx_p, val_p, mask_p, lr.reshape(1, 1), lam=lam,
+        interpret=(mode == "kernel_interpret"))
+    return x_new[:mb, :f], t_new[:nb, :f]

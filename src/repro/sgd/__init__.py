@@ -1,0 +1,24 @@
+"""SGD solver subsystem (CuMF_SGD, arxiv 1610.05838) — peer of core/als.py.
+
+Layers:
+
+- ``blocking``  — g x g (user-block, item-block) matrix blocking of the
+  rating COO plus the conflict-free diagonal block-set schedule;
+- ``train``     — the batch-Hogwild epoch driver (lr schedules, RMSE
+  tracking, checkpointing);
+- ``hybrid``    — ALS-warm-start -> SGD-refine (Tan et al. 1808.03843).
+
+The per-block update kernel lives with the other Pallas kernels in
+``repro.kernels.sgd_update`` (oracle in ``repro.kernels.ref``).
+"""
+from repro.sgd.blocking import (BlockGrid, block_coo, block_ell,
+                                diagonal_sets, ell_to_coo)
+from repro.sgd.hybrid import hybrid_train, sgd_state_from_als
+from repro.sgd.train import (SgdConfig, SgdState, sgd_epoch, sgd_init,
+                             sgd_train)
+
+__all__ = [
+    "BlockGrid", "block_coo", "block_ell", "diagonal_sets", "ell_to_coo",
+    "SgdConfig", "SgdState", "sgd_epoch", "sgd_init", "sgd_train",
+    "hybrid_train", "sgd_state_from_als",
+]

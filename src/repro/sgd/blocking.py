@@ -1,0 +1,148 @@
+"""CuMF_SGD matrix blocking: g x g rating grid + conflict-free schedule.
+
+The rating COO is partitioned into a g x g grid of (user-block,
+item-block) tiles.  Two tiles conflict iff they share a user block (both
+update the same X rows) or an item block (same Theta rows); CuMF_SGD's
+scheduler therefore runs the grid as ``g`` *diagonal block-sets*
+
+    set s = { (i, (i + s) mod g) : i = 0..g-1 },   s = 0..g-1
+
+— within a set every user block and every item block appears exactly
+once, so the g tile updates are mutually independent (batch-Hogwild runs
+them concurrently without locks), and the union over the g sets covers
+every tile exactly once per epoch.
+
+Each tile is stored as a block-local PaddedELL slice, built through the
+same ``csr_from_coo`` / ``pad_csr_fast`` path as the ALS side, with K
+padded to the grid-wide maximum so every tile presents one device shape
+(one kernel compilation covers the whole epoch).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Tuple
+
+import numpy as np
+
+from repro.sparse.padded import PaddedELL, csr_from_coo, pad_csr_fast
+
+
+def diagonal_sets(g: int) -> List[List[Tuple[int, int]]]:
+    """The g conflict-free block-sets; set s holds tiles (i, (i+s) % g)."""
+    return [[(i, (i + s) % g) for i in range(g)] for s in range(g)]
+
+
+def ell_to_coo(ell: PaddedELL) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Recover (rows, cols, vals) of the logical matrix from a PaddedELL."""
+    cols_t, rows_t, vals = ell.transpose_coo()   # (orig cols, orig rows, vals)
+    return rows_t, cols_t, vals
+
+
+@dataclasses.dataclass
+class BlockGrid:
+    """g x g grid of block-local PaddedELL tiles, uniform device shape.
+
+    ``idx[i, j]`` holds *item-block-local* column indices (< nb) of the
+    nonzeros whose user falls in user-block i and item in item-block j;
+    the row coordinate within the [mb, K] tile is the *user-block-local*
+    user index.  ``m``/``n`` are the true matrix dims; ``g*mb >= m`` and
+    ``g*nb >= n`` (factor rows in the padding range are never touched —
+    every cnt there is 0).
+    """
+
+    idx: np.ndarray   # [g, g, mb, K] int32
+    val: np.ndarray   # [g, g, mb, K] float32
+    cnt: np.ndarray   # [g, g, mb]    int32
+    g: int
+    m: int
+    n: int
+
+    @property
+    def mb(self) -> int:
+        return self.idx.shape[2]
+
+    @property
+    def nb(self) -> int:
+        return -(-self.n // self.g)
+
+    @property
+    def K(self) -> int:
+        return self.idx.shape[3]
+
+    @property
+    def nnz(self) -> int:
+        return int(self.cnt.sum())
+
+    @property
+    def fill(self) -> float:
+        """Stored slots / true nonzeros across the whole grid (>= 1)."""
+        return float(self.g * self.g * self.mb * self.K) / max(self.nnz, 1)
+
+    def block(self, i: int, j: int) -> PaddedELL:
+        """Tile (i, j) as a standalone block-local PaddedELL."""
+        return PaddedELL(idx=self.idx[i, j], val=self.val[i, j],
+                         cnt=self.cnt[i, j], n_cols=self.nb)
+
+    def to_coo(self) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """Reassemble the global-coordinate COO (round-trip check)."""
+        rows, cols, vals = [], [], []
+        for i in range(self.g):
+            for j in range(self.g):
+                r, c, v = ell_to_coo(self.block(i, j))
+                rows.append(r + i * self.mb)
+                cols.append(c + j * self.nb)
+                vals.append(v)
+        return (np.concatenate(rows), np.concatenate(cols),
+                np.concatenate(vals))
+
+
+def block_coo(rows: np.ndarray, cols: np.ndarray, vals: np.ndarray,
+              m: int, n: int, g: int, k_multiple: int = 8) -> BlockGrid:
+    """Partition a rating COO into a g x g BlockGrid.
+
+    Block sizes are ``mb = ceil(m/g)`` users x ``nb = ceil(n/g)`` items;
+    every tile is CSR-sorted and ELL-padded through the shared sparse
+    stack, then K-padded to the grid maximum for a uniform kernel shape.
+    """
+    assert g >= 1
+    mb = -(-m // g)
+    nb = -(-n // g)
+    bi = rows // mb            # user block of each nonzero
+    bj = cols // nb            # item block
+    # one pass over the COO: stable-sort by flat block id, then slice —
+    # per-block boolean masks would rescan all nnz g*g times
+    order = np.argsort(bi * g + bj, kind="stable")
+    rows, cols, vals = rows[order], cols[order], vals[order]
+    per_block = np.bincount((bi * g + bj)[order], minlength=g * g)
+    ends = np.cumsum(per_block)
+    tiles: list[list[PaddedELL]] = []
+    kmax = k_multiple
+    for i in range(g):
+        row_tiles = []
+        for j in range(g):
+            hi = int(ends[i * g + j])
+            lo = hi - int(per_block[i * g + j])
+            ptr, cc, vv = csr_from_coo(
+                rows[lo:hi] - i * mb, cols[lo:hi] - j * nb, vals[lo:hi], mb)
+            ell = pad_csr_fast(ptr, cc, vv, nb, k_multiple=k_multiple)
+            kmax = max(kmax, ell.K)
+            row_tiles.append(ell)
+        tiles.append(row_tiles)
+    idx = np.zeros((g, g, mb, kmax), dtype=np.int32)
+    val = np.zeros((g, g, mb, kmax), dtype=np.float32)
+    cnt = np.zeros((g, g, mb), dtype=np.int32)
+    for i in range(g):
+        for j in range(g):
+            e = tiles[i][j]
+            idx[i, j, :, :e.K] = e.idx
+            val[i, j, :, :e.K] = e.val
+            cnt[i, j] = e.cnt
+    return BlockGrid(idx=idx, val=val, cnt=cnt, g=g, m=m, n=n)
+
+
+def block_ell(ell: PaddedELL, g: int, k_multiple: int = 8) -> BlockGrid:
+    """Blocked view of an existing row-major PaddedELL (the ALS layout) —
+    the shard-sharing entry point the hybrid driver uses."""
+    rows, cols, vals = ell_to_coo(ell)
+    return block_coo(rows, cols, vals, ell.m, ell.n_cols, g,
+                     k_multiple=k_multiple)

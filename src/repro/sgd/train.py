@@ -1,0 +1,156 @@
+"""Batch-Hogwild SGD epoch driver (CuMF_SGD) over a BlockGrid.
+
+One epoch walks the g conflict-free diagonal block-sets in order; every
+tile in a set touches disjoint X and Theta rows, so tile updates within a
+set commute (the lock-free property CuMF_SGD exploits — here they also
+make the epoch deterministic).  Every rating is visited exactly once per
+epoch.  The per-tile sweep is ``repro.kernels.sgd_update`` (Pallas kernel
+or jnp oracle, same dispatch vocabulary as the ALS ops).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.objective import rmse_padded
+from repro.kernels.sgd_update import sgd_block_update
+from repro.sgd.blocking import BlockGrid, diagonal_sets
+from repro.training.optimizer import lr_schedule
+
+
+@dataclasses.dataclass(frozen=True)
+class SgdConfig:
+    f: int                      # latent dimension
+    lam: float                  # per-sample L2 strength
+    lr: float = 0.08            # base learning rate
+    epochs: int = 30
+    schedule: str = "inverse_time"  # constant | inverse_time | cosine
+    decay: Optional[float] = None   # inverse-time decay (None = 10/epochs)
+    min_lr: float = 0.0             # cosine floor
+    mode: str = "ref"           # kernel dispatch: ref | kernel | kernel_interpret
+    row_mult: int = 8
+    col_mult: int = 128
+    f_mult: int = 128
+    seed: int = 0
+    init_scale: float = 0.3
+
+
+class SgdState(NamedTuple):
+    x: jax.Array          # [g*mb, f] user factors (padded rows past m unused)
+    theta: jax.Array      # [g*nb, f] item factors (padded rows past n unused)
+    epoch: jax.Array      # scalar int32
+
+
+def epoch_lr(cfg: SgdConfig, epoch: int) -> float:
+    """The scheduled learning rate for one epoch (host-side float)."""
+    return float(lr_schedule(cfg.schedule, epoch, base_lr=cfg.lr,
+                             total_steps=cfg.epochs, decay=cfg.decay,
+                             min_lr=cfg.min_lr))
+
+
+def sgd_init(grid: BlockGrid, cfg: SgdConfig) -> SgdState:
+    """Uniform init at the grid's padded sizes (matches ``als_init`` scale)."""
+    kx, kt = jax.random.split(jax.random.PRNGKey(cfg.seed))
+    mp, np_ = grid.g * grid.mb, grid.g * grid.nb
+    x = jax.random.uniform(kx, (mp, cfg.f), jnp.float32) * cfg.init_scale
+    theta = jax.random.uniform(kt, (np_, cfg.f), jnp.float32) * cfg.init_scale
+    return SgdState(x=x, theta=theta, epoch=jnp.int32(0))
+
+
+def grid_triplet(grid: BlockGrid):
+    """BlockGrid -> device triplet (idx [g,g,mb,K], val, cnt)."""
+    return (jnp.asarray(grid.idx, jnp.int32),
+            jnp.asarray(grid.val, jnp.float32),
+            jnp.asarray(grid.cnt, jnp.int32))
+
+
+def sgd_epoch(state: SgdState, gt, g: int, cfg: SgdConfig,
+              lr: float) -> SgdState:
+    """One full epoch: g diagonal sets x g independent tiles per set."""
+    idx, val, cnt = gt
+    mb, nb = idx.shape[2], -(-state.theta.shape[0] // g)
+    f = cfg.f
+    xb = state.x.reshape(g, mb, f)
+    tb = state.theta.reshape(g, nb, f)
+    lr_t = jnp.float32(lr)     # traced, so the lr decay never retriggers jit
+    for tiles in diagonal_sets(g):
+        for i, j in tiles:
+            xi, tj = sgd_block_update(
+                xb[i], tb[j], idx[i, j], val[i, j], cnt[i, j], lr_t,
+                cfg.lam, mode=cfg.mode, row_mult=cfg.row_mult,
+                col_mult=cfg.col_mult, f_mult=cfg.f_mult)
+            xb = xb.at[i].set(xi)
+            tb = tb.at[j].set(tj)
+    return SgdState(x=xb.reshape(g * mb, f), theta=tb.reshape(g * nb, f),
+                    epoch=state.epoch + 1)
+
+
+def sgd_train(
+    grid: BlockGrid,
+    cfg: SgdConfig,
+    *,
+    test: Optional[tuple] = None,
+    train_eval: Optional[tuple] = None,
+    init_state: Optional[SgdState] = None,
+    ckpt_dir: Optional[str] = None,
+    callback=None,
+) -> tuple[SgdState, list[dict]]:
+    """Epoch loop with lr schedule, RMSE tracking, and checkpoint/resume.
+
+    ``test`` / ``train_eval`` are global-coordinate (idx, val, cnt)
+    triplets (the same eval protocol as ``als_train``); evaluation slices
+    the padded factors back to the true (m, n).  With ``ckpt_dir`` the
+    driver restores the latest epoch on entry and saves after every epoch
+    (async, paper §4.4 protocol), so a killed run resumes bit-exact.
+    """
+    state = sgd_init(grid, cfg) if init_state is None else init_state
+    start = int(state.epoch)
+    mgr = None
+    if ckpt_dir is not None:
+        from repro.checkpoint import CheckpointManager
+        mgr = CheckpointManager(ckpt_dir, keep=2)
+        restored, ck_epoch = mgr.restore_or_init(
+            {"x": state.x, "theta": state.theta}, lambda: None)
+        if ck_epoch:
+            state = SgdState(x=jnp.asarray(restored["x"]),
+                             theta=jnp.asarray(restored["theta"]),
+                             epoch=jnp.int32(ck_epoch))
+            start = ck_epoch
+    gt = grid_triplet(grid)
+    m, n = grid.m, grid.n
+    history: list[dict] = []
+    for ep in range(start, cfg.epochs):
+        lr = epoch_lr(cfg, ep)
+        state = sgd_epoch(state, gt, grid.g, cfg, lr)
+        rec = {"epoch": ep + 1, "lr": lr}
+        x, th = state.x[:m], state.theta[:n]
+        if test is not None:
+            rec["test_rmse"] = float(rmse_padded(x, th, *test))
+        if train_eval is not None:
+            rec["train_rmse"] = float(rmse_padded(x, th, *train_eval))
+        history.append(rec)
+        if mgr is not None:
+            mgr.save(ep + 1, {"x": state.x, "theta": state.theta})
+        if callback is not None:
+            callback(state, rec)
+    if mgr is not None:
+        mgr.wait()
+    return state, history
+
+
+def pad_factor(a: jax.Array, rows_to: int) -> jax.Array:
+    """Zero-pad a factor's leading axis up to the grid's padded row count."""
+    extra = rows_to - a.shape[0]
+    assert extra >= 0, (a.shape, rows_to)
+    if extra == 0:
+        return a
+    return jnp.pad(a, ((0, extra), (0, 0)))
+
+
+def factors_np(state: SgdState, grid: BlockGrid) -> tuple[np.ndarray, np.ndarray]:
+    """Unpadded (X [m, f], Theta [n, f]) as numpy."""
+    return (np.asarray(state.x[:grid.m]), np.asarray(state.theta[:grid.n]))

@@ -23,6 +23,39 @@ class OptConfig:
     eps: float = 1e-8
     weight_decay: float = 0.0
     grad_clip: float = 1.0
+    schedule: str = "constant"   # constant | inverse_time | cosine
+    schedule_steps: int = 1000   # horizon for cosine / default inverse-time decay
+    min_lr: float = 0.0          # cosine floor
+
+
+def lr_schedule(name: str, step, *, base_lr: float = 1.0,
+                total_steps: int = 1000, decay: float | None = None,
+                min_lr: float = 0.0) -> jax.Array:
+    """Learning rate at ``step`` (int or traced scalar) — shared by the
+    SGD factorization driver and the LM optimizers.
+
+    - ``constant``:     base_lr
+    - ``inverse_time``: base_lr / (1 + decay * step); ``decay`` defaults
+      to ``10 / total_steps`` (a 10x+ drop over the horizon)
+    - ``cosine``:       min_lr + (base_lr - min_lr) * cos-anneal over
+      ``total_steps``, flat at ``min_lr`` afterwards
+    """
+    t = jnp.asarray(step, jnp.float32)
+    if name == "constant":
+        return jnp.full((), base_lr, jnp.float32) + 0.0 * t
+    if name == "inverse_time":
+        d = (10.0 / max(total_steps, 1)) if decay is None else decay
+        return base_lr / (1.0 + d * t)
+    if name == "cosine":
+        frac = jnp.clip(t / max(total_steps, 1), 0.0, 1.0)
+        return min_lr + (base_lr - min_lr) * 0.5 * (1.0 + jnp.cos(jnp.pi * frac))
+    raise ValueError(f"unknown lr schedule {name!r}")
+
+
+def _cfg_lr(cfg: OptConfig, step) -> jax.Array:
+    """The scheduled lr of an OptConfig at ``step`` (traced-safe)."""
+    return lr_schedule(cfg.schedule, step, base_lr=cfg.lr,
+                       total_steps=cfg.schedule_steps, min_lr=cfg.min_lr)
 
 
 class AdamState(NamedTuple):
@@ -51,6 +84,7 @@ def clip_by_global_norm(grads, max_norm):
 def adam_update(grads, state: AdamState, params, cfg: OptConfig):
     grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip)
     step = state.step + 1
+    lr = _cfg_lr(cfg, state.step)
     b1c = 1.0 - cfg.b1 ** step.astype(jnp.float32)
     b2c = 1.0 - cfg.b2 ** step.astype(jnp.float32)
 
@@ -62,7 +96,7 @@ def adam_update(grads, state: AdamState, params, cfg: OptConfig):
         delta = mhat / (jnp.sqrt(vhat) + cfg.eps)
         if cfg.weight_decay:
             delta = delta + cfg.weight_decay * p.astype(jnp.float32)
-        return (p.astype(jnp.float32) - cfg.lr * delta).astype(p.dtype), m, v
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), m, v
 
     out = jax.tree.map(upd, params, grads, state.m, state.v)
     new_params = jax.tree.map(lambda t: t[0], out, is_leaf=lambda x: isinstance(x, tuple))
@@ -98,6 +132,7 @@ def adafactor_init(params) -> AdafactorState:
 def adafactor_update(grads, state: AdafactorState, params, cfg: OptConfig):
     grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip)
     step = state.step + 1
+    lr = _cfg_lr(cfg, state.step)
     decay = 1.0 - (step.astype(jnp.float32) + 1.0) ** -0.8
 
     def upd(p, g, vr, vc):
@@ -115,9 +150,9 @@ def adafactor_update(grads, state: AdafactorState, params, cfg: OptConfig):
         # relative-scale clipping (Adafactor's d=1 update clipping)
         rms = jnp.sqrt(jnp.mean(jnp.square(delta)) + 1e-30)
         delta = delta / jnp.maximum(1.0, rms)
-        new_p = (p.astype(jnp.float32) - cfg.lr * delta)
+        new_p = (p.astype(jnp.float32) - lr * delta)
         if cfg.weight_decay:
-            new_p = new_p - cfg.lr * cfg.weight_decay * p.astype(jnp.float32)
+            new_p = new_p - lr * cfg.weight_decay * p.astype(jnp.float32)
         return new_p.astype(p.dtype), vr, vc
 
     out = jax.tree.map(upd, params, grads, state.vr, state.vc)

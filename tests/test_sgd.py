@@ -1,0 +1,219 @@
+"""SGD solver subsystem: blocking invariants, kernel-vs-oracle, and the
+ALS-parity convergence acceptance (SGD and hybrid within 2% of the ALS
+baseline RMSE on the planted-Netflix recipe)."""
+import numpy as np
+import pytest
+from _propcheck import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from repro.core import als as als_mod
+from repro.kernels.sgd_update import sgd_block_update
+from repro.sgd import (SgdConfig, SgdState, block_coo, block_ell,
+                       diagonal_sets, hybrid_train, sgd_train)
+from repro.sgd.train import sgd_init
+from repro.sparse import synth
+
+
+def _random_coo(rng, m, n, nnz):
+    rows = rng.integers(0, m, nnz)
+    cols = rng.integers(0, n, nnz)
+    key = rows * n + cols
+    _, uniq = np.unique(key, return_index=True)
+    rows, cols = rows[uniq], cols[uniq]
+    vals = rng.standard_normal(len(rows)).astype(np.float32)
+    return rows, cols, vals
+
+
+# ---------------------------------------------------------------------------
+# blocking
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=10, deadline=None)
+@given(g=st.integers(1, 6))
+def test_diagonal_sets_conflict_free(g):
+    """Within a set no two tiles share a user block or an item block, and
+    the g sets cover every tile of the g x g grid exactly once."""
+    sets = diagonal_sets(g)
+    assert len(sets) == g
+    seen = set()
+    for s in sets:
+        assert len(s) == g
+        assert len({i for i, _ in s}) == g, s     # user blocks disjoint
+        assert len({j for _, j in s}) == g, s     # item blocks disjoint
+        seen.update(s)
+    assert len(seen) == g * g
+
+
+@settings(max_examples=10, deadline=None)
+@given(m=st.integers(4, 40), n=st.integers(4, 40), nnz=st.integers(1, 300),
+       g=st.sampled_from([1, 2, 3, 4]), seed=st.integers(0, 1000))
+def test_block_grid_roundtrip(m, n, nnz, g, seed):
+    """block_coo -> to_coo reassembles the original nonzero set exactly."""
+    rng = np.random.default_rng(seed)
+    rows, cols, vals = _random_coo(rng, m, n, nnz)
+    grid = block_coo(rows, cols, vals, m, n, g)
+    assert grid.nnz == len(rows)
+    r2, c2, v2 = grid.to_coo()
+    want = sorted(zip(rows.tolist(), cols.tolist(), vals.tolist()))
+    got = sorted(zip(r2.tolist(), c2.tolist(), v2.tolist()))
+    assert [(a, b) for a, b, _ in want] == [(a, b) for a, b, _ in got]
+    np.testing.assert_allclose([v for _, _, v in want],
+                               [v for _, _, v in got], rtol=1e-6)
+
+
+def test_block_ell_matches_block_coo():
+    rng = np.random.default_rng(7)
+    rows, cols, vals = _random_coo(rng, 32, 24, 200)
+    from repro.sparse.padded import csr_from_coo, pad_csr_fast
+    ptr, cc, vv = csr_from_coo(rows, cols, vals, 32)
+    ell = pad_csr_fast(ptr, cc, vv, 24)
+    ga = block_coo(rows, cols, vals, 32, 24, 3)
+    gb = block_ell(ell, 3)
+    np.testing.assert_array_equal(ga.idx, gb.idx)
+    np.testing.assert_array_equal(ga.val, gb.val)
+    np.testing.assert_array_equal(ga.cnt, gb.cnt)
+
+
+# ---------------------------------------------------------------------------
+# kernel vs oracle
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("mb,nb,f,K", [(12, 10, 5, 9), (8, 8, 8, 8),
+                                       (16, 24, 4, 17)])
+def test_sgd_kernel_matches_oracle(mb, nb, f, K):
+    """Pallas tile sweep (interpret) == pure-JAX ref, including the
+    determinized in-slot item-collision semantics and padding."""
+    rng = np.random.default_rng(mb * 100 + K)
+    x = jnp.asarray(rng.standard_normal((mb, f)), jnp.float32) * 0.3
+    th = jnp.asarray(rng.standard_normal((nb, f)), jnp.float32) * 0.3
+    cnt = jnp.asarray(rng.integers(0, K + 1, mb), jnp.int32)
+    idx = jnp.asarray(rng.integers(0, nb, (mb, K)), jnp.int32)
+    val = jnp.asarray(rng.standard_normal((mb, K)), jnp.float32)
+    xr, tr = sgd_block_update(x, th, idx, val, cnt, 0.05, 0.01, mode="ref")
+    xk, tk = sgd_block_update(x, th, idx, val, cnt, 0.05, 0.01,
+                              mode="kernel_interpret",
+                              row_mult=8, col_mult=8, f_mult=8)
+    np.testing.assert_allclose(xr, xk, atol=1e-5, rtol=1e-5)
+    np.testing.assert_allclose(tr, tk, atol=1e-5, rtol=1e-5)
+
+
+def test_sgd_update_is_pure_decay_on_empty_rows():
+    """Rows with cnt=0 must be untouched (padding rows of the grid)."""
+    x = jnp.ones((4, 3))
+    th = jnp.ones((5, 3))
+    idx = jnp.zeros((4, 6), jnp.int32)
+    val = jnp.zeros((4, 6))
+    cnt = jnp.zeros((4,), jnp.int32)
+    x2, t2 = sgd_block_update(x, th, idx, val, cnt, 0.1, 0.05, mode="ref")
+    np.testing.assert_array_equal(x2, x)
+    np.testing.assert_array_equal(t2, th)
+
+
+# ---------------------------------------------------------------------------
+# convergence acceptance: SGD / hybrid vs the ALS baseline
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def problem():
+    spec = synth.SynthSpec("netflix-mini", m=768, n=160, nnz=40_000,
+                           f=8, lam=0.05)
+    r, rt, rte, _ = synth.make_synthetic_ratings(spec, seed=2, noise=0.1)
+    rr, rtt, rtest = (als_mod.ell_triplet(e) for e in (r, rt, rte))
+    grid = block_ell(r, g=4)
+    als_cfg = als_mod.AlsConfig(f=spec.f, lam=spec.lam, iters=8, mode="ref")
+    _, hist = als_mod.als_train(rr, rtt, r.m, rt.m, als_cfg, test=rtest)
+    return spec, grid, rr, rtt, rtest, hist[-1]["test_rmse"]
+
+
+def test_sgd_within_2pct_of_als(problem):
+    spec, grid, _, _, rtest, als_rmse = problem
+    cfg = SgdConfig(f=spec.f, lam=spec.lam, lr=0.15, epochs=40,
+                    schedule="cosine", mode="ref", seed=1)
+    _, hist = sgd_train(grid, cfg, test=rtest)
+    sgd_rmse = hist[-1]["test_rmse"]
+    assert sgd_rmse <= als_rmse * 1.02, (sgd_rmse, als_rmse)
+    # the schedule actually decayed
+    assert hist[-1]["lr"] < hist[0]["lr"] * 0.1
+
+
+def test_hybrid_within_2pct_of_als(problem):
+    spec, grid, rr, rtt, rtest, als_rmse = problem
+    warm = als_mod.AlsConfig(f=spec.f, lam=spec.lam, iters=2, mode="ref")
+    refine = SgdConfig(f=spec.f, lam=spec.lam, lr=0.12, epochs=16,
+                       schedule="cosine", mode="ref", seed=1)
+    _, hist = hybrid_train(rr, rtt, grid, warm, refine, test=rtest)
+    assert [h["phase"] for h in hist] == ["als"] * 2 + ["sgd"] * 16
+    hyb_rmse = hist[-1]["test_rmse"]
+    assert hyb_rmse <= als_rmse * 1.02, (hyb_rmse, als_rmse)
+    # warm start pays off: first SGD epoch starts far below a cold start
+    assert hist[2]["test_rmse"] < hist[0]["test_rmse"]
+
+
+def test_sgd_checkpoint_resume_bit_exact(problem, tmp_path):
+    """Kill after 3 epochs + resume to 5 == straight 5-epoch run."""
+    spec, grid, _, _, rtest, _ = problem
+    # decay pinned explicitly: the default (10/epochs) would make the
+    # 3-epoch and 5-epoch configs follow different schedules
+    kw = dict(f=spec.f, lam=spec.lam, lr=0.1, schedule="inverse_time",
+              decay=1.0, mode="ref", seed=4)
+    straight, _ = sgd_train(grid, SgdConfig(epochs=5, **kw))
+    ck = str(tmp_path / "sgd_ck")
+    sgd_train(grid, SgdConfig(epochs=3, **kw), ckpt_dir=ck)
+    resumed, hist = sgd_train(grid, SgdConfig(epochs=5, **kw), ckpt_dir=ck)
+    assert [h["epoch"] for h in hist] == [4, 5]
+    np.testing.assert_allclose(resumed.x, straight.x, atol=1e-6)
+    np.testing.assert_allclose(resumed.theta, straight.theta, atol=1e-6)
+
+
+def test_hybrid_resume_skips_als_warm_start(problem, tmp_path):
+    """Resuming a checkpointed hybrid run must not re-run (and re-report)
+    the ALS warm start: the checkpoint already embeds it."""
+    spec, grid, rr, rtt, rtest, _ = problem
+    warm = als_mod.AlsConfig(f=spec.f, lam=spec.lam, iters=1, mode="ref")
+    refine = SgdConfig(f=spec.f, lam=spec.lam, lr=0.1, epochs=2,
+                       schedule="inverse_time", decay=1.0, mode="ref")
+    ck = str(tmp_path / "hyb_ck")
+    final1, hist1 = hybrid_train(rr, rtt, grid, warm, refine, ckpt_dir=ck)
+    assert [h["phase"] for h in hist1] == ["als", "sgd", "sgd"]
+    final2, hist2 = hybrid_train(rr, rtt, grid, warm, refine, ckpt_dir=ck)
+    assert hist2 == []     # fully complete: no ALS re-run, no SGD epochs
+    np.testing.assert_allclose(final2.x, final1.x, atol=1e-6)
+    np.testing.assert_allclose(final2.theta, final1.theta, atol=1e-6)
+
+
+def test_diagonal_set_order_within_set_is_irrelevant(problem):
+    """Conflict-freedom, observed: permuting tiles inside a set cannot
+    change the epoch result because the tiles touch disjoint factor rows."""
+    spec, grid, _, _, _, _ = problem
+    from repro.sgd.train import grid_triplet, sgd_epoch
+    cfg = SgdConfig(f=spec.f, lam=spec.lam, lr=0.1, epochs=1, mode="ref")
+    state = sgd_init(grid, cfg)
+    a = sgd_epoch(state, grid_triplet(grid), grid.g, cfg, 0.1)
+
+    idx, val, cnt = (np.array(grid.idx), np.array(grid.val),
+                     np.array(grid.cnt))
+    perm = [(i + 1) % grid.g for i in range(grid.g)]  # rotate tiles per set
+    # permuting user-block i within a set s means visiting (i, (i+s)%g) in a
+    # different order; emulate by reordering both factors and tiles
+    idx2 = idx[perm][:, :]                       # reorder user-block rows
+    val2 = val[perm]
+    cnt2 = cnt[perm]
+    # rotate item-block columns the same way so (i, (i+s)%g) still pairs
+    # the same data; the factor blocks rotate alongside
+    idx2 = idx2[:, perm]
+    val2 = val2[:, perm]
+    cnt2 = cnt2[:, perm]
+    xb = np.array(state.x).reshape(grid.g, grid.mb, cfg.f)[perm]
+    tb = np.array(state.theta).reshape(grid.g, grid.nb, cfg.f)[perm]
+    state2 = SgdState(x=jnp.asarray(xb.reshape(-1, cfg.f)),
+                      theta=jnp.asarray(tb.reshape(-1, cfg.f)),
+                      epoch=jnp.int32(0))
+    gt2 = (jnp.asarray(idx2), jnp.asarray(val2), jnp.asarray(cnt2))
+    b = sgd_epoch(state2, gt2, grid.g, cfg, 0.1)
+    bx = np.array(b.x).reshape(grid.g, grid.mb, cfg.f)
+    bt = np.array(b.theta).reshape(grid.g, grid.nb, cfg.f)
+    ax = np.array(a.x).reshape(grid.g, grid.mb, cfg.f)
+    at = np.array(a.theta).reshape(grid.g, grid.nb, cfg.f)
+    np.testing.assert_allclose(bx, ax[perm], atol=1e-6)
+    np.testing.assert_allclose(bt, at[perm], atol=1e-6)

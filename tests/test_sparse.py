@@ -62,6 +62,54 @@ def test_partition_preserves_matrix(seed, p):
     np.testing.assert_array_equal(parts.cnt.sum(axis=0), ell.cnt)
 
 
+@settings(max_examples=10, deadline=None)
+@given(m=st.integers(4, 32), n=st.integers(4, 32),
+       nnz=st.integers(1, 200), seed=st.integers(0, 1000))
+def test_transpose_coo_roundtrip(m, n, nnz, seed):
+    """coo -> ELL -> transpose -> ELL -> transpose == original nnz set."""
+    rng = np.random.default_rng(seed)
+    rows, cols, vals = _random_coo(rng, m, n, nnz)
+    ptr, cc, vv = padded.csr_from_coo(rows, cols, vals, m)
+    ell = padded.pad_csr_fast(ptr, cc, vv, n)
+    tr, tc, tv = ell.transpose_coo()
+    ptr_t, cc_t, vv_t = padded.csr_from_coo(tr, tc, tv, n)
+    ell_t = padded.pad_csr_fast(ptr_t, cc_t, vv_t, m)
+    rr, rc, rv = ell_t.transpose_coo()      # transpose of the transpose
+    want = sorted(zip(rows.tolist(), cols.tolist(), vals.tolist()))
+    got = sorted(zip(rr.tolist(), rc.tolist(), rv.tolist()))
+    assert [(a, b) for a, b, _ in want] == [(a, b) for a, b, _ in got]
+    np.testing.assert_allclose([v for *_, v in want], [v for *_, v in got],
+                               rtol=1e-6)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 1000), dense_rows=st.integers(1, 3))
+def test_pad_csr_fast_equals_slow_on_ragged(seed, dense_rows):
+    """Deliberately ragged degrees — a few near-dense rows, many sparse
+    ones, and guaranteed empty rows — must produce identical layouts."""
+    rng = np.random.default_rng(seed)
+    m, n = 24, 64
+    rows_l, cols_l = [], []
+    for u in range(dense_rows):                   # near-dense head rows
+        cc = rng.choice(n, size=n - 2, replace=False)
+        rows_l.append(np.full(len(cc), u)), cols_l.append(cc)
+    for u in range(dense_rows, m - 4):            # sparse tail, skewed
+        deg = int(rng.integers(0, 5))
+        cc = rng.choice(n, size=deg, replace=False)
+        rows_l.append(np.full(deg, u)), cols_l.append(cc)
+    rows = np.concatenate(rows_l).astype(np.int64)   # rows m-4..m-1 empty
+    cols = np.concatenate(cols_l).astype(np.int64)
+    vals = rng.standard_normal(len(rows)).astype(np.float32)
+    ptr, cc, vv = padded.csr_from_coo(rows, cols, vals, m)
+    a = padded.pad_csr(ptr, cc, vv, n)
+    b = padded.pad_csr_fast(ptr, cc, vv, n)
+    assert a.K == b.K
+    np.testing.assert_array_equal(a.idx, b.idx)
+    np.testing.assert_array_equal(a.val, b.val)
+    np.testing.assert_array_equal(a.cnt, b.cnt)
+    assert int(a.cnt[-1]) == 0                       # empty rows survived
+
+
 def test_synthetic_ratings_shapes_and_split():
     spec = synth.scaled(synth.DATASETS["netflix"], 0.003, f=8)
     r, rt, rte, (xs, ts) = synth.make_synthetic_ratings(spec, seed=0)

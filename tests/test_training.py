@@ -34,6 +34,55 @@ def test_optimizer_decreases_quadratic(name):
     assert l1 < 0.05 * l0, (name, l0, l1)
 
 
+def test_lr_schedule_shapes():
+    """constant / inverse-time / cosine endpoints and monotonicity."""
+    sched = opt_mod.lr_schedule
+    assert float(sched("constant", 0, base_lr=0.3)) == pytest.approx(0.3)
+    assert float(sched("constant", 999, base_lr=0.3)) == pytest.approx(0.3)
+    assert float(sched("inverse_time", 0, base_lr=0.2)) == pytest.approx(0.2)
+    inv = [float(sched("inverse_time", s, base_lr=0.2, decay=0.5))
+           for s in range(6)]
+    assert all(b < a for a, b in zip(inv, inv[1:]))
+    assert inv[2] == pytest.approx(0.2 / 2.0)        # 1 + 0.5*2
+    assert float(sched("cosine", 0, base_lr=0.4,
+                       total_steps=10)) == pytest.approx(0.4)
+    assert float(sched("cosine", 10, base_lr=0.4, total_steps=10,
+                       min_lr=0.04)) == pytest.approx(0.04)
+    # flat at the floor past the horizon
+    assert float(sched("cosine", 25, base_lr=0.4, total_steps=10,
+                       min_lr=0.04)) == pytest.approx(0.04)
+    cos = [float(sched("cosine", s, base_lr=0.4, total_steps=10))
+           for s in range(11)]
+    assert all(b <= a for a, b in zip(cos, cos[1:]))
+    with pytest.raises(ValueError):
+        sched("nope", 0)
+
+
+def test_lr_schedule_traced_under_jit():
+    f = jax.jit(lambda s: opt_mod.lr_schedule(
+        "cosine", s, base_lr=0.1, total_steps=10))
+    assert float(f(jnp.int32(5))) == pytest.approx(0.05)
+
+
+def test_optimizer_uses_schedule():
+    """First step (cos(0)=1) matches constant exactly; a step at the
+    cosine horizon with min_lr=0 is a no-op."""
+    params = {"w": jnp.asarray([3.0, -2.0])}
+    g = {"w": jnp.asarray([1.0, 0.5])}
+    const = opt_mod.OptConfig(lr=0.1, grad_clip=10.0)
+    cos = opt_mod.OptConfig(lr=0.1, grad_clip=10.0, schedule="cosine",
+                            schedule_steps=8)
+    s_const = opt_mod.adam_init(params)
+    s_cos = opt_mod.adam_init(params)
+    p1, _, _ = opt_mod.adam_update(g, s_const, params, const)
+    p2, _, _ = opt_mod.adam_update(g, s_cos, params, cos)
+    np.testing.assert_allclose(p1["w"], p2["w"])
+    # at step >= horizon the cosine lr is min_lr = 0 -> params frozen
+    s_end = opt_mod.AdamState(m=s_cos.m, v=s_cos.v, step=jnp.int32(8))
+    p3, _, _ = opt_mod.adam_update(g, s_end, params, cos)
+    np.testing.assert_allclose(p3["w"], params["w"])
+
+
 def test_grad_clip():
     g = {"a": jnp.full((4,), 100.0)}
     clipped, norm = opt_mod.clip_by_global_norm(g, 1.0)
