@@ -4,14 +4,19 @@ planted-Netflix recipe.
 
 Each solver runs to convergence-ish on identical data; every epoch (ALS
 iteration / SGD epoch) appends a (cumulative seconds, test RMSE) point.
-The records land in BENCH_sgd.json via ``benchmarks/run.py``'s generic
-JSON path.
+A fourth ``sgd_stream`` row runs the same SGD recipe through the
+out-of-core tile-wave driver at a capped capacity (waves >= 2 per
+diagonal set), recording the budget, the metered peak, and the streamed
+traffic next to its RMSE curve.  The records land in BENCH_sgd.json via
+``benchmarks/run.py``'s generic JSON path; ``run(quick=True)`` (the CI
+smoke) shrinks the problem and epoch counts.
 """
 from __future__ import annotations
 
 import time
 
 from repro.core import als as als_mod
+from repro.outofcore import TileStore, build_sgd_schedule, run_streaming_sgd
 from repro.sgd import SgdConfig, block_ell, hybrid_train, sgd_train
 from repro.sparse import synth
 
@@ -32,23 +37,29 @@ def _timed_curve():
     return points, cb
 
 
-def run():
-    spec = synth.SynthSpec("netflix-mini", m=1536, n=256, nnz=90_000,
-                           f=16, lam=0.05)
+def run(quick: bool = False):
+    if quick:
+        spec = synth.SynthSpec("netflix-micro", m=512, n=128, nnz=20_000,
+                               f=8, lam=0.05)
+        als_iters, sgd_epochs, hyb_epochs = 3, 8, 6
+    else:
+        spec = synth.SynthSpec("netflix-mini", m=1536, n=256, nnz=90_000,
+                               f=16, lam=0.05)
+        als_iters, sgd_epochs, hyb_epochs = 8, 40, 24
     r, rt, rte, _ = synth.make_synthetic_ratings(spec, seed=3, noise=0.1)
     rr, rtt, rtest = (als_mod.ell_triplet(e) for e in (r, rt, rte))
     grid = block_ell(r, g=4)
 
     records = []
 
-    def record(solver, points, epochs):
+    def record(solver, points, epochs, **extra):
         total = points[-1]["t"] if points else 0.0
         rec = {
             "solver": solver, "m": spec.m, "n": spec.n, "nnz": r.nnz,
             "f": spec.f, "g": grid.g, "epochs": epochs,
             "final_rmse": points[-1]["rmse"] if points else None,
             "epochs_per_sec": epochs / total if total else None,
-            "curve": points,
+            "curve": points, **extra,
         }
         records.append(rec)
         emit(f"sgd_vs_als_{solver}", total / max(epochs, 1) * 1e6,
@@ -56,23 +67,38 @@ def run():
              f"epochs_per_sec={rec['epochs_per_sec']:.2f}")
         return rec
 
-    als_cfg = als_mod.AlsConfig(f=spec.f, lam=spec.lam, iters=8, mode="ref")
+    als_cfg = als_mod.AlsConfig(f=spec.f, lam=spec.lam, iters=als_iters,
+                                mode="ref")
     points, cb = _timed_curve()
     als_mod.als_train(rr, rtt, r.m, rt.m, als_cfg, test=rtest, callback=cb)
     record("als", points, als_cfg.iters)
 
-    sgd_cfg = SgdConfig(f=spec.f, lam=spec.lam, lr=0.15, epochs=40,
+    sgd_cfg = SgdConfig(f=spec.f, lam=spec.lam, lr=0.15, epochs=sgd_epochs,
                         schedule="cosine", mode="ref", seed=1)
     points, cb = _timed_curve()
     sgd_train(grid, sgd_cfg, test=rtest, callback=cb)
     record("sgd", points, sgd_cfg.epochs)
 
     warm_cfg = als_mod.AlsConfig(f=spec.f, lam=spec.lam, iters=2, mode="ref")
-    ref_cfg = SgdConfig(f=spec.f, lam=spec.lam, lr=0.15, epochs=24,
+    ref_cfg = SgdConfig(f=spec.f, lam=spec.lam, lr=0.15, epochs=hyb_epochs,
                         schedule="cosine", mode="ref", seed=1)
     points, cb = _timed_curve()   # hybrid_train forwards cb to both phases
     hybrid_train(rr, rtt, grid, warm_cfg, ref_cfg, test=rtest, callback=cb)
     record("hybrid", points, warm_cfg.iters + ref_cfg.epochs)
+
+    # capped-capacity streaming row: same SGD recipe through the tile-wave
+    # driver, 2 simulated workers -> 2 waves per diagonal set
+    tiles = TileStore(grid)
+    sched = build_sgd_schedule(grid, spec.f, n_workers=2)
+    points, cb = _timed_curve()
+    _, _, tel = run_streaming_sgd(tiles, sched, sgd_cfg, test_eval=rtest,
+                                  callback=cb)
+    rec = record("sgd_stream", points, sgd_cfg.epochs,
+                 waves_per_epoch=sched.waves_per_epoch,
+                 capacity_bytes=tel.capacity_bytes,
+                 peak_bytes=tel.peak_bytes,
+                 bytes_streamed=tel.bytes_streamed)
+    assert rec["peak_bytes"] <= rec["capacity_bytes"], rec
     return records
 
 

@@ -10,16 +10,21 @@ Selection::
     python benchmarks/run.py                      # everything
     python benchmarks/run.py --quick              # fast subset
     python benchmarks/run.py --only convergence --only sgd
+    python benchmarks/run.py --only sgd --quick   # sgd at smoke scale
 
-``--only`` takes the short names below (repeatable) and composes with
-nothing else; unknown names fail loudly rather than silently skipping
-(the old ``--quick`` truncated the module list and never reached the
-JSON-emitting modules).
+``--only`` takes the short names below (repeatable); unknown names fail
+loudly rather than silently skipping (the old ``--quick`` truncated the
+module list and never reached the JSON-emitting modules).  ``--quick``
+without ``--only`` selects the fast subset; combined with ``--only`` it
+keeps the explicit selection and is instead passed through to any module
+whose ``run`` accepts a ``quick`` keyword (scaled-down problem sizes for
+the CI smoke lane).
 """
 from __future__ import annotations
 
 import argparse
 import importlib
+import inspect
 import json
 import os
 import sys
@@ -71,7 +76,10 @@ def main(argv=None) -> None:
         if name not in selected:
             continue
         mod = importlib.import_module(f"benchmarks.{modname}")
-        out = mod.run()
+        kwargs = {}
+        if args.quick and "quick" in inspect.signature(mod.run).parameters:
+            kwargs["quick"] = True
+        out = mod.run(**kwargs)
         json_out = getattr(mod, "JSON_OUT", None)
         if json_out and out:
             with open(json_out, "w") as f:

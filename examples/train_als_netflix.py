@@ -35,6 +35,27 @@ Solver selection (``--solver {als,sgd,hybrid}``):
     PYTHONPATH=src python examples/train_als_netflix.py --small --solver sgd
     PYTHONPATH=src python examples/train_als_netflix.py --small \
         --solver hybrid --iters 2 --epochs 16
+
+``--out-of-core`` composes with every solver (the wave scheduler is
+solver-generic — schedules are built from abstract wave work items):
+
+  =========  ==============================================================
+  solver     what streams through the capped device
+  =========  ==============================================================
+  ``als``    R row slices (solve-X half), R^T shards + fresh X slices
+             (accumulate-Theta half) — ``run_streaming_als``
+  ``sgd``    diagonal-set tile waves of the g x g block grid, up to
+             ``--n-data`` tiles per wave, per-epoch shuffled set order —
+             ``run_streaming_sgd``
+  ``hybrid`` both in sequence under the same budget: streamed ALS warm
+             start, then streamed SGD refinement —
+             ``run_streaming_hybrid``
+  =========  ==============================================================
+
+    PYTHONPATH=src python examples/train_als_netflix.py --small \
+        --out-of-core --solver sgd --g 4 --n-data 2
+    PYTHONPATH=src python examples/train_als_netflix.py --small \
+        --out-of-core --solver hybrid --iters 2 --epochs 16
 """
 import argparse
 import os
@@ -48,10 +69,10 @@ from repro.core.partition import plan_for, plan_partitions
 from repro.sparse import synth
 
 
-def run_out_of_core(spec, r, rte, args):
-    """Wave-streaming path: ISSUE-2 subsystem end to end."""
+def _als_store_and_schedule(spec, r, args):
+    """Capped-capacity ALS wave plan: store + schedule (shared with hybrid)."""
     from repro.outofcore import (RatingStore, build_schedule,
-                                 required_capacity_bytes, run_streaming_als)
+                                 required_capacity_bytes)
 
     cap = args.device_mb << 20
     plan = plan_partitions(spec.m, spec.n, r.nnz, spec.f, hbm_bytes=cap,
@@ -74,24 +95,96 @@ def run_out_of_core(spec, r, rte, args):
     need = required_capacity_bytes(store, sched, spec.f)
     print(f"schedule: {sched.describe()} "
           f"(driver needs {need / 2**20:.1f}MiB/device)")
-    cfg = als_mod.AlsConfig(f=spec.f, lam=spec.lam, iters=args.iters,
-                            mode="ref", batch_rows=16_384)
+    return store, sched
+
+
+def _sgd_tiles_and_schedule(spec, r, args):
+    """Tile-wave plan: --n-data simulated workers stream the g x g grid
+    against the --device-mb budget."""
+    from repro.outofcore import (TileStore, build_sgd_schedule,
+                                 sgd_required_capacity_bytes)
+    from repro.sgd import block_ell
+
+    grid = block_ell(r, g=args.g)
+    print(f"block grid: g={grid.g} mb={grid.mb} nb={grid.nb} K={grid.K} "
+          f"fill={grid.fill:.2f}x")
+    cap = args.device_mb << 20
+    need = sgd_required_capacity_bytes(grid.mb, grid.nb, grid.K, spec.f)
+    if need > cap:
+        print(f"WARNING: one worker's tile pipeline needs "
+              f"{need/2**20:.1f}MiB > --device-mb {args.device_mb}MiB; "
+              f"raise --device-mb or --g (smaller tiles)")
+    sched = build_sgd_schedule(grid, spec.f, n_workers=args.n_data,
+                               capacity_bytes=cap)
+    print(f"schedule: {sched.describe()} "
+          f"(driver needs {need/2**20:.1f}MiB/worker)")
+    return TileStore(grid), sched
+
+
+def _tel_summary(tel, ckpt):
+    return (f"done in {tel.wall_seconds:.1f}s; resumed_from_step="
+            f"{tel.resumed_from_step}; peak {tel.peak_bytes/2**20:.1f}MiB of "
+            f"{tel.capacity_bytes/2**20:.1f}MiB budget; "
+            f"{tel.bytes_streamed/2**20:.1f}MiB streamed over {tel.waves_run} "
+            f"waves; checkpoints in {ckpt}")
+
+
+def run_out_of_core(spec, r, rte, args):
+    """Wave-streaming path, all solvers (see the module docstring matrix)."""
     rtest = als_mod.ell_triplet(rte)
 
-    def progress(it, rec):
-        print(f"iter {it+1:2d}  test_rmse={rec.get('test_rmse', float('nan')):.4f}  "
-              f"waves={rec['waves_run']}  peak={rec['peak_bytes']/2**20:.1f}MiB",
-              flush=True)
+    if args.solver == "als":
+        from repro.outofcore import run_streaming_als
+        store, sched = _als_store_and_schedule(spec, r, args)
+        cfg = als_mod.AlsConfig(f=spec.f, lam=spec.lam, iters=args.iters,
+                                mode="ref", batch_rows=16_384)
 
-    t0 = time.time()
-    _, history, tel = run_streaming_als(
-        store, sched, cfg, ckpt_dir=args.ckpt, test_eval=rtest,
-        callback=progress)
-    print(f"done in {time.time()-t0:.1f}s; resumed_from_step="
-          f"{tel.resumed_from_step}; peak {tel.peak_bytes/2**20:.1f}MiB of "
-          f"{tel.capacity_bytes/2**20:.1f}MiB budget; "
-          f"{tel.bytes_streamed/2**20:.1f}MiB streamed over {tel.waves_run} "
-          f"waves; checkpoints in {args.ckpt}")
+        def progress(it, rec):
+            print(f"iter {it+1:2d}  "
+                  f"test_rmse={rec.get('test_rmse', float('nan')):.4f}  "
+                  f"waves={rec['waves_run']}  "
+                  f"peak={rec['peak_bytes']/2**20:.1f}MiB", flush=True)
+
+        # solver-scoped ckpt dir: the streaming tree (factors + Hermitian
+        # accumulators) is shaped differently from the in-core ALS one
+        ckpt = os.path.join(args.ckpt, "oc_als")
+        _, _, tel = run_streaming_als(store, sched, cfg, ckpt_dir=ckpt,
+                                      test_eval=rtest, callback=progress)
+        print(_tel_summary(tel, ckpt))
+        return
+
+    def progress(_state, rec):
+        tag = rec.get("phase", args.solver)
+        step = rec.get("epoch", rec.get("iteration"))
+        print(f"{tag} {step:3d}  "
+              f"test_rmse={rec.get('test_rmse', float('nan')):.4f}  "
+              f"waves={rec.get('waves_run', '-')}  "
+              f"peak={rec.get('peak_bytes', 0)/2**20:.1f}MiB", flush=True)
+
+    sgd_cfg_kw = dict(f=spec.f, lam=spec.lam, lr=args.sgd_lr,
+                      epochs=args.epochs, schedule=args.schedule, mode="ref")
+    # solver-scoped ckpt dir: the trees differ per solver (see run_sgd)
+    ckpt = os.path.join(args.ckpt, "oc_" + args.solver)
+    if args.solver == "sgd":
+        from repro.outofcore import run_streaming_sgd
+        from repro.sgd import SgdConfig
+        tiles, sched = _sgd_tiles_and_schedule(spec, r, args)
+        _, _, tel = run_streaming_sgd(tiles, sched, SgdConfig(**sgd_cfg_kw),
+                                      ckpt_dir=ckpt, test_eval=rtest,
+                                      callback=progress)
+        print(_tel_summary(tel, ckpt))
+    else:                       # hybrid: both phases stream
+        from repro.sgd import SgdConfig, run_streaming_hybrid
+        store, als_sched = _als_store_and_schedule(spec, r, args)
+        tiles, sgd_sched = _sgd_tiles_and_schedule(spec, r, args)
+        warm = als_mod.AlsConfig(f=spec.f, lam=spec.lam, iters=args.iters,
+                                 mode="ref", batch_rows=16_384)
+        _, _, (atel, stel) = run_streaming_hybrid(
+            store, als_sched, tiles, sgd_sched, warm, SgdConfig(**sgd_cfg_kw),
+            ckpt_dir=ckpt, test_eval=rtest, callback=progress)
+        for phase, tel in (("als", atel), ("sgd", stel)):
+            if tel is not None:
+                print(f"[{phase}] " + _tel_summary(tel, ckpt))
 
 
 def run_sgd(spec, r, rt, rte, args):

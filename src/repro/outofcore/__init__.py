@@ -25,15 +25,30 @@ Paper vocabulary -> implementation map:
 - **checkpoint/restart** (§4.4 fault tolerance): every completed wave
   commits factors (+ Hermitian accumulators mid-half) through
   ``checkpoint.CheckpointManager``; a killed run resumes mid-iteration.
+
+The subsystem is **solver-generic**: schedules are built from abstract wave
+work items (``schedule.WaveItem``) and the drivers share one streaming
+runtime (``runtime`` — meter, telemetry, per-wave checkpointer).  Beyond
+the ALS halves above, ``run_streaming_sgd`` streams a CuMF_SGD
+``BlockGrid``'s diagonal-set tiles (``schedule.TileWave``) through the same
+budget, so the SGD and hybrid solvers factorize matrices larger than device
+memory too.
 """
-from repro.outofcore.driver import (MemoryMeter, SimulatedFailure,
-                                    StreamTelemetry, run_streaming_als)
-from repro.outofcore.schedule import (IterationSchedule, Wave, build_schedule,
-                                      required_capacity_bytes)
-from repro.outofcore.store import FactorStore, RatingStore
+from repro.outofcore.driver import run_streaming_als
+from repro.outofcore.runtime import (MemoryMeter, SimulatedFailure,
+                                     StreamTelemetry, WaveCheckpointer)
+from repro.outofcore.schedule import (IterationSchedule, SgdEpochSchedule,
+                                      TileWave, Wave, WaveItem,
+                                      build_schedule, build_sgd_schedule,
+                                      required_capacity_bytes,
+                                      sgd_required_capacity_bytes)
+from repro.outofcore.sgd_driver import run_streaming_sgd
+from repro.outofcore.store import FactorStore, RatingStore, TileStore
 
 __all__ = [
     "FactorStore", "IterationSchedule", "MemoryMeter", "RatingStore",
-    "SimulatedFailure", "StreamTelemetry", "Wave", "build_schedule",
-    "required_capacity_bytes", "run_streaming_als",
+    "SgdEpochSchedule", "SimulatedFailure", "StreamTelemetry", "TileStore",
+    "TileWave", "Wave", "WaveCheckpointer", "WaveItem", "build_schedule",
+    "build_sgd_schedule", "required_capacity_bytes",
+    "run_streaming_als", "run_streaming_sgd", "sgd_required_capacity_bytes",
 ]

@@ -23,8 +23,6 @@ full), which is what the planner's eq. (8) budget prices.
 """
 from __future__ import annotations
 
-import dataclasses
-import threading
 import time
 from typing import Callable, List, Optional
 
@@ -35,47 +33,13 @@ from repro.checkpoint import CheckpointManager
 from repro.core import als as als_mod
 from repro.core.objective import rmse_padded
 from repro.data.prefetch import Prefetcher
+from repro.outofcore.runtime import (MemoryMeter, SimulatedFailure,
+                                     StreamTelemetry, WaveCheckpointer)
 from repro.outofcore.schedule import IterationSchedule
 from repro.outofcore.store import FactorStore, RatingStore, triplet_nbytes
 
-
-class MemoryMeter:
-    """Named live-allocation tracker (thread-safe: the prefetch worker
-    registers wave buffers while the consumer frees earlier ones)."""
-
-    def __init__(self):
-        self._lock = threading.Lock()
-        self._live: dict[str, int] = {}
-        self.live_bytes = 0
-        self.peak_bytes = 0
-
-    def alloc(self, name: str, nbytes: int) -> None:
-        with self._lock:
-            assert name not in self._live, name
-            self._live[name] = int(nbytes)
-            self.live_bytes += int(nbytes)
-            self.peak_bytes = max(self.peak_bytes, self.live_bytes)
-
-    def free(self, name: str) -> None:
-        with self._lock:
-            self.live_bytes -= self._live.pop(name)
-
-
-@dataclasses.dataclass
-class StreamTelemetry:
-    """What the run actually did — peak footprint, traffic, resume point."""
-
-    capacity_bytes: int = 0
-    peak_bytes: int = 0
-    waves_run: int = 0
-    batches_loaded: int = 0
-    bytes_streamed: int = 0      # host->device rating + factor-slice traffic
-    resumed_from_step: int = 0
-    wall_seconds: float = 0.0
-
-
-class SimulatedFailure(RuntimeError):
-    """Raised by ``fail_after_waves`` — stands in for a killed machine."""
+__all__ = ["MemoryMeter", "SimulatedFailure", "StreamTelemetry",
+           "run_streaming_als"]
 
 
 def _zeros_ckpt_tree(m_pad: int, n: int, f: int) -> dict:
@@ -146,11 +110,10 @@ def run_streaming_als(
         x0[:ratings.m] = np.asarray(st.x)
         factors = FactorStore.from_arrays(x0, np.asarray(st.theta))
 
-    saves_this_run = 0
+    ckpt = WaveCheckpointer(mgr, fail_after_waves)
 
     def _save(step: int, acc=None):
-        nonlocal saves_this_run
-        if mgr is not None:
+        def tree_fn():
             tree = _zeros_ckpt_tree(m_pad, n, f)
             # snapshot copies: the manager commits async while later waves
             # keep mutating the live factor arrays
@@ -159,13 +122,8 @@ def run_streaming_als(
                 tree["a_acc"] = np.asarray(acc[0])
                 tree["b_acc"] = np.asarray(acc[1])
                 tree["c_acc"] = np.asarray(acc[2])
-            mgr.save(step, tree)
-        saves_this_run += 1
-        if fail_after_waves is not None and saves_this_run >= fail_after_waves:
-            if mgr is not None:
-                mgr.wait()                  # make sure the wave committed
-            raise SimulatedFailure(
-                f"simulated kill after {saves_this_run} wave(s)")
+            return tree
+        ckpt.save(step, tree_fn)
 
     # ------------------------------------------------------------------
     # solve-X half: stream R row slices, solve rows, write back.

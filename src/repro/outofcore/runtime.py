@@ -1,0 +1,79 @@
+"""Solver-agnostic streaming runtime: the plumbing every wave driver shares.
+
+The out-of-core subsystem runs more than one solver (ALS half-iterations,
+SGD diagonal-set epochs); what they have in common is not the math but the
+execution substrate: a metered simulated-device footprint, telemetry of what
+actually streamed, per-wave checkpoint commits, and the simulated-kill hook
+the resume tests drive.  That substrate lives here so a new solver's driver
+only writes its wave loop.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+from typing import Callable, Optional
+
+
+class MemoryMeter:
+    """Named live-allocation tracker (thread-safe: the prefetch worker
+    registers wave buffers while the consumer frees earlier ones)."""
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._live: dict[str, int] = {}
+        self.live_bytes = 0
+        self.peak_bytes = 0
+
+    def alloc(self, name: str, nbytes: int) -> None:
+        with self._lock:
+            assert name not in self._live, name
+            self._live[name] = int(nbytes)
+            self.live_bytes += int(nbytes)
+            self.peak_bytes = max(self.peak_bytes, self.live_bytes)
+
+    def free(self, name: str) -> None:
+        with self._lock:
+            self.live_bytes -= self._live.pop(name)
+
+
+@dataclasses.dataclass
+class StreamTelemetry:
+    """What the run actually did — peak footprint, traffic, resume point."""
+
+    capacity_bytes: int = 0
+    peak_bytes: int = 0
+    waves_run: int = 0
+    batches_loaded: int = 0
+    bytes_streamed: int = 0      # host->device rating + factor-slice traffic
+    resumed_from_step: int = 0
+    wall_seconds: float = 0.0
+
+
+class SimulatedFailure(RuntimeError):
+    """Raised by ``fail_after_waves`` — stands in for a killed machine."""
+
+
+class WaveCheckpointer:
+    """Per-wave commit + simulated-kill counter, shared by the drivers.
+
+    ``save`` takes the checkpoint tree as a thunk so the host-side snapshot
+    copies are only made when a manager is actually attached; the kill fires
+    *after* the wave's commit is durable (``mgr.wait()``), which is what lets
+    the resume tests demand bit-exact continuation.
+    """
+
+    def __init__(self, mgr, fail_after_waves: Optional[int] = None):
+        self.mgr = mgr
+        self.fail_after_waves = fail_after_waves
+        self.saves = 0
+
+    def save(self, step: int, tree_fn: Callable[[], dict]) -> None:
+        if self.mgr is not None:
+            self.mgr.save(step, tree_fn())
+        self.saves += 1
+        if (self.fail_after_waves is not None
+                and self.saves >= self.fail_after_waves):
+            if self.mgr is not None:
+                self.mgr.wait()             # make sure the wave committed
+            raise SimulatedFailure(
+                f"simulated kill after {self.saves} wave(s)")

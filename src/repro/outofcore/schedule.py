@@ -1,8 +1,21 @@
-"""Wave schedule: a PartitionPlan made executable (paper §4.3/§4.4).
+"""Wave schedules: streaming plans made executable (paper §4.3/§4.4).
+
+A schedule is a sequence of abstract **wave work items** — each names the
+host-resident shards one synchronous streaming step moves through the
+(simulated) devices — plus the per-device capacity the driver meters
+against.  Two concrete item kinds exist today:
+
+- ``Wave`` (ALS): up to ``n_data`` contiguous q-batches — R row slices on
+  the solve-X half, R^T column shards + fresh X slices on the
+  accumulate-Theta half.
+- ``TileWave`` (SGD): up to ``n_workers`` tiles of one conflict-free
+  diagonal block-set of a ``BlockGrid`` — each simulated worker holds one
+  (user-block, item-block) tile plus its two factor blocks, the CuMF_SGD
+  batch-Hogwild unit.
 
 ``build_schedule`` turns the planner's (p, q, waves) into explicit per-
-iteration work: which q-batches (X row ranges) each wave streams, which R
-shards it touches, and which factor slices must be device-resident.  One
+iteration ALS work: which q-batches (X row ranges) each wave streams, which
+R shards it touches, and which factor slices must be device-resident.  One
 iteration runs two halves over the *same* wave list:
 
 - **solve-X half** — Theta is fully resident (the plan's ``Theta_shard``
@@ -27,10 +40,21 @@ from repro.core.partition import GiB, PartitionPlan, QBatch, export_schedule
 
 
 @dataclasses.dataclass(frozen=True)
-class Wave:
-    """One synchronous streaming step: up to n_data contiguous q-batches."""
+class WaveItem:
+    """Abstract wave work item: one synchronous streaming step.
+
+    ``index`` is the item's checkpoint position within its schedule unit
+    (iteration half for ALS, epoch for SGD) — the drivers commit resumable
+    state after every item, so ``index`` is also the resume coordinate.
+    """
 
     index: int
+
+
+@dataclasses.dataclass(frozen=True)
+class Wave(WaveItem):
+    """ALS wave: up to n_data contiguous q-batches."""
+
     batches: Tuple[QBatch, ...]
 
     @property
@@ -94,6 +118,126 @@ def build_schedule(
         plan=plan, m_pad=m_pad, n=n, n_data=n_data, waves=waves,
         capacity_bytes=(plan.bytes_per_device if capacity_bytes is None
                         else capacity_bytes))
+
+
+# ---------------------------------------------------------------------------
+# SGD: diagonal block-sets streamed as tile waves.
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class TileWave(WaveItem):
+    """SGD wave: up to n_workers tiles of ONE diagonal block-set.
+
+    Tiles within a set touch disjoint user and item blocks, so the wave's
+    tiles update concurrently (batch-Hogwild) and consecutive waves of the
+    same set commute; a wave must never mix sets — tiles of different sets
+    share factor blocks.
+    """
+
+    set_index: int
+    tiles: Tuple[Tuple[int, int], ...]   # (user-block i, item-block j)
+
+
+@dataclasses.dataclass(frozen=True)
+class SgdEpochSchedule:
+    """One SGD epoch as tile waves, grouped by canonical set index.
+
+    ``set_waves[s]`` holds the waves of diagonal set ``s`` in canonical
+    order; an epoch executes the sets in a per-epoch permuted order (the
+    CuMF_SGD schedule randomization), so ``epoch_waves(set_order)``
+    flattens and renumbers the waves for one concrete epoch.
+    """
+
+    g: int
+    mb: int                     # user rows per block
+    nb: int                     # item rows per block
+    K: int                      # uniform ELL slots per tile
+    f: int                      # latent dimension
+    n_workers: int              # simulated devices == tiles per wave
+    set_waves: Tuple[Tuple[TileWave, ...], ...]
+    capacity_bytes: int         # per-worker budget the driver meters against
+
+    @property
+    def waves_per_epoch(self) -> int:
+        """Checkpoint steps per epoch (every set, every wave)."""
+        return sum(len(ws) for ws in self.set_waves)
+
+    def epoch_waves(self, set_order) -> Tuple[TileWave, ...]:
+        """The epoch's flat wave list: sets in ``set_order``, waves
+        renumbered 0..waves_per_epoch-1 (the per-epoch resume coordinate)."""
+        assert sorted(int(s) for s in set_order) == list(range(self.g)), \
+            set_order
+        out = []
+        for s in set_order:
+            for w in self.set_waves[int(s)]:
+                out.append(dataclasses.replace(w, index=len(out)))
+        return tuple(out)
+
+    def describe(self) -> str:
+        return (f"sgd waves={self.waves_per_epoch}/epoch "
+                f"({self.g} sets x {len(self.set_waves[0])} waves, "
+                f"{self.n_workers} tiles/wave, mb={self.mb}, nb={self.nb}, "
+                f"K={self.K}, capacity={self.capacity_bytes / GiB:.3f}GiB)")
+
+
+def sgd_tile_bytes(mb: int, K: int) -> int:
+    """Streamed bytes of one tile's (idx, val, cnt) triplet."""
+    return mb * K * 8 + mb * 4
+
+
+def sgd_required_capacity_bytes(mb: int, nb: int, K: int, f: int,
+                                prefetch_depth: int = 2) -> int:
+    """Per-worker bytes the streaming SGD driver keeps resident.
+
+    Mirrors ``run_streaming_sgd``'s MemoryMeter model: up to ``depth + 2``
+    tile triplets live in the prefetch pipeline (queued + loader-held +
+    consumed), while the factor blocks are fetched synchronously at consume
+    time (they must see the previous wave's writeback — see the driver) and
+    are staged twice (input + updated output) around the tile sweep.
+    """
+    bufs = prefetch_depth + 2
+    factor_bytes = (mb + nb) * f * 4
+    return bufs * sgd_tile_bytes(mb, K) + 2 * factor_bytes
+
+
+def build_sgd_schedule(
+    grid,
+    f: int,
+    *,
+    n_workers: Optional[int] = None,
+    capacity_bytes: Optional[int] = None,
+    prefetch_depth: int = 2,
+) -> SgdEpochSchedule:
+    """Tile-wave schedule for one SGD epoch over a ``BlockGrid``.
+
+    ``n_workers`` is the simulated device count: each wave streams that many
+    tiles of one diagonal set (default: the whole set at once, the in-core
+    shape).  ``n_workers < g`` forces multiple waves per set — the
+    out-of-core regime where the epoch's tiles stream through a fixed
+    budget.  ``capacity_bytes`` defaults to the driver's own resident-bytes
+    model (``sgd_required_capacity_bytes``).
+    """
+    g, mb, nb, K = grid.g, grid.mb, grid.nb, grid.K
+    if n_workers is None:
+        n_workers = g
+    n_workers = max(1, min(int(n_workers), g))
+    set_waves = []
+    for s in range(g):
+        tiles = tuple((i, (i + s) % g) for i in range(g))
+        # index is the within-set position only; epoch_waves renumbers to
+        # the epoch-flat resume coordinate before any driver sees it
+        set_waves.append(tuple(
+            TileWave(index=c // n_workers, set_index=s,
+                     tiles=tiles[c:c + n_workers])
+            for c in range(0, g, n_workers)))
+    if capacity_bytes is None:
+        capacity_bytes = sgd_required_capacity_bytes(
+            mb, nb, K, f, prefetch_depth)
+    sched = SgdEpochSchedule(
+        g=g, mb=mb, nb=nb, K=K, f=f, n_workers=n_workers,
+        set_waves=tuple(set_waves), capacity_bytes=int(capacity_bytes))
+    assert sched.waves_per_epoch == g * -(-g // n_workers)
+    return sched
 
 
 def required_capacity_bytes(store, sched: IterationSchedule, f: int,

@@ -1,0 +1,181 @@
+"""Streaming SGD driver: execute a tile-wave schedule end to end.
+
+CuMF_SGD's block grid carries the same out-of-core property as the ALS
+waves (cuMF §3.3): a (user-block, item-block) tile only ever touches its
+two factor blocks, so an epoch streams tiles through a fixed device budget
+instead of holding the grid resident.  Per epoch the driver:
+
+- permutes the diagonal-set order with ``sgd.train.epoch_set_order`` (the
+  same PRNG the in-core epoch uses, keyed on ``(cfg.seed, epoch)`` — the
+  streaming trajectory matches the in-core one and resume is bit-exact);
+- walks the epoch's ``TileWave`` list, double-buffering each wave's tile
+  triplets host->device through ``data.prefetch.Prefetcher``.  Factor
+  blocks are deliberately NOT prefetched: consecutive waves of different
+  sets share blocks, so a block read ahead of the previous wave's
+  writeback would be stale — they are fetched synchronously at consume
+  time (they are O(f) per row; the O(K) rating payload is what preload
+  hides);
+- stacks the wave's tiles into ONE ``sgd_block_update`` dispatch (tiles of
+  a set are disjoint in both factors — the same stacking as the in-core
+  scan epoch) and writes the updated blocks straight back to the host
+  ``FactorStore``;
+- commits resumable state (factors + global wave step) through
+  ``checkpoint.CheckpointManager`` after every wave, so a killed run
+  restarts mid-epoch.
+
+``MemoryMeter`` models one simulated worker of the wave (payloads divide by
+the wave's tile count), mirroring the ALS driver's per-device accounting.
+"""
+from __future__ import annotations
+
+import time
+from typing import List, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import CheckpointManager
+from repro.core.objective import rmse_padded
+from repro.data.prefetch import Prefetcher
+from repro.outofcore.runtime import (MemoryMeter, StreamTelemetry,
+                                     WaveCheckpointer)
+from repro.outofcore.schedule import SgdEpochSchedule
+from repro.outofcore.store import FactorStore, TileStore, triplet_nbytes
+from repro.sgd.train import (SgdConfig, epoch_lr, epoch_set_order, sgd_init,
+                             sgd_tiles_update)
+
+
+def run_streaming_sgd(
+    tiles: TileStore,
+    sched: SgdEpochSchedule,
+    cfg: SgdConfig,
+    *,
+    factors: Optional[FactorStore] = None,
+    ckpt_dir: Optional[str] = None,
+    keep: int = 3,
+    prefetch_depth: int = 2,
+    train_eval=None,                 # (idx, val, cnt) for per-epoch RMSE
+    test_eval=None,
+    fail_after_waves: Optional[int] = None,
+    callback=None,
+) -> tuple[FactorStore, List[dict], StreamTelemetry]:
+    """Run ``cfg.epochs`` streaming SGD epochs of ``sched`` over ``tiles``.
+
+    Returns (factor store, per-epoch history, telemetry) — the same
+    protocol as ``run_streaming_als``.  With ``ckpt_dir`` set the run
+    resumes from the latest committed wave; ``factors`` seeds a warm start
+    (the hybrid path) and defaults to ``sgd_init`` at the grid's shape.
+    """
+    assert (tiles.g, tiles.mb, tiles.nb, tiles.K) == \
+        (sched.g, sched.mb, sched.nb, sched.K), \
+        "TileStore and SgdEpochSchedule were built for different grids"
+    g, mb, nb, f = sched.g, sched.mb, sched.nb, cfg.f
+    assert f == sched.f, (f, sched.f)
+    wpe = sched.waves_per_epoch
+    fac_bytes = (mb + nb) * f * 4          # one worker's two factor blocks
+
+    meter = MemoryMeter()
+    tel = StreamTelemetry(capacity_bytes=sched.capacity_bytes)
+    t_start = time.perf_counter()
+
+    mgr = CheckpointManager(ckpt_dir, keep=keep) if ckpt_dir else None
+    start_step = 0
+    if mgr is not None:
+        tree, start_step = mgr.restore_or_init(
+            {"x": np.zeros((g * mb, f), np.float32),
+             "theta": np.zeros((g * nb, f), np.float32)}, lambda: None)
+        if start_step:
+            factors = FactorStore.from_arrays(tree["x"], tree["theta"])
+    tel.resumed_from_step = start_step
+    if factors is None:
+        st = sgd_init(tiles.grid, cfg)
+        factors = FactorStore.from_arrays(st.x, st.theta)
+    assert factors.x.shape == (g * mb, f), (factors.x.shape, g, mb, f)
+    assert factors.theta.shape == (g * nb, f), (factors.theta.shape, g, nb, f)
+
+    ckpt = WaveCheckpointer(mgr, fail_after_waves)
+
+    def _save(step: int):
+        # snapshot copies: the manager commits async while later waves keep
+        # mutating the live factor arrays
+        ckpt.save(step, lambda: {"x": factors.x.copy(),
+                                 "theta": factors.theta.copy()})
+
+    def _epoch(ep: int, first_wave: int):
+        lr_t = jnp.float32(epoch_lr(cfg, ep))
+        order = np.asarray(epoch_set_order(cfg.seed, ep, g))
+        waves = sched.epoch_waves(order)
+
+        def gen():
+            for wave in waves[first_wave:]:
+                trips = [tiles.tile_triplet(i, j) for i, j in wave.tiles]
+                yield wave, trips
+
+        def put(item):
+            wave, trips = item
+            payload = sum(triplet_nbytes(t) for t in trips)
+            # one simulated worker holds ONE tile of the wave
+            meter.alloc(f"tilewave{wave.index}", payload // len(trips))
+            dev = (jnp.asarray(np.stack([t[0] for t in trips])),
+                   jnp.asarray(np.stack([t[1] for t in trips])),
+                   jnp.asarray(np.stack([t[2] for t in trips])))
+            return wave, dev, payload
+
+        with Prefetcher(gen(), depth=prefetch_depth, put=put) as pf:
+            for wave, (idx_d, val_d, cnt_d), payload in pf:
+                t = len(wave.tiles)
+                # factor blocks: synchronous fetch AFTER the previous
+                # wave's writeback (see module doc — prefetching these
+                # across a set boundary would read stale blocks)
+                meter.alloc(f"fac_in{wave.index}", fac_bytes)
+                x_host = np.stack([
+                    factors.read_slice("x", i * mb, (i + 1) * mb)
+                    for i, _ in wave.tiles])
+                th_host = np.stack([
+                    factors.read_slice("theta", j * nb, (j + 1) * nb)
+                    for _, j in wave.tiles])
+                meter.alloc(f"fac_out{wave.index}", fac_bytes)
+                # the wave's disjoint tiles stack into one dispatch — the
+                # same sgd_tiles_update the in-core scan epoch uses, which
+                # is what keeps streaming == in-core parity exact
+                x_new, t_new = sgd_tiles_update(
+                    jnp.asarray(x_host), jnp.asarray(th_host), idx_d,
+                    val_d, cnt_d, lr_t, cfg.lam, mode=cfg.mode,
+                    row_mult=cfg.row_mult, col_mult=cfg.col_mult,
+                    f_mult=cfg.f_mult)
+                x_np, t_np = np.asarray(x_new), np.asarray(t_new)
+                for k, (i, j) in enumerate(wave.tiles):
+                    factors.write_slice("x", i * mb, (i + 1) * mb, x_np[k])
+                    factors.write_slice("theta", j * nb, (j + 1) * nb,
+                                        t_np[k])
+                meter.free(f"fac_out{wave.index}")
+                meter.free(f"fac_in{wave.index}")
+                meter.free(f"tilewave{wave.index}")
+                tel.waves_run += 1
+                tel.batches_loaded += t
+                tel.bytes_streamed += payload + x_host.nbytes + th_host.nbytes
+                _save(ep * wpe + wave.index + 1)
+
+    history: List[dict] = []
+    m, n = tiles.m, tiles.n
+    ep0 = start_step // wpe
+    for ep in range(ep0, cfg.epochs):
+        _epoch(ep, first_wave=start_step % wpe if ep == ep0 else 0)
+        rec = {"epoch": ep + 1, "lr": epoch_lr(cfg, ep),
+               "waves_run": tel.waves_run, "peak_bytes": meter.peak_bytes}
+        if train_eval is not None or test_eval is not None:
+            x_dev = jnp.asarray(factors.x[:m])
+            t_dev = jnp.asarray(factors.theta[:n])
+            if test_eval is not None:
+                rec["test_rmse"] = float(rmse_padded(x_dev, t_dev, *test_eval))
+            if train_eval is not None:
+                rec["train_rmse"] = float(
+                    rmse_padded(x_dev, t_dev, *train_eval))
+        history.append(rec)
+        if callback is not None:
+            callback(factors, rec)
+    if mgr is not None:
+        mgr.wait()
+    tel.peak_bytes = meter.peak_bytes
+    tel.wall_seconds = time.perf_counter() - t_start
+    return factors, history, tel

@@ -137,3 +137,59 @@ class RatingStore:
         return (self.rt_parts.idx[j].astype(np.int32, copy=False),
                 self.rt_parts.val[j].astype(np.float32, copy=False),
                 self.rt_parts.cnt[j].astype(np.int32, copy=False))
+
+
+class TileStore:
+    """Host-resident g x g ``BlockGrid`` tiles for the streaming SGD driver.
+
+    The grid's stacked arrays already live in host memory in exactly the
+    shapes the tile waves stream — one ``[mb, K]`` triplet per (user-block,
+    item-block) tile — so the store is a thin per-tile view layer over the
+    grid, the SGD counterpart of ``RatingStore``'s wave slicing.  Factor
+    blocks live in a ``FactorStore`` whose X is ``[g*mb, f]`` and Theta is
+    ``[g*nb, f]``; block ``i`` is the contiguous slice ``[i*mb, (i+1)*mb)``.
+    """
+
+    def __init__(self, grid):
+        self.grid = grid
+
+    @property
+    def g(self) -> int:
+        return self.grid.g
+
+    @property
+    def mb(self) -> int:
+        return self.grid.mb
+
+    @property
+    def nb(self) -> int:
+        return self.grid.nb
+
+    @property
+    def K(self) -> int:
+        return self.grid.K
+
+    @property
+    def m(self) -> int:
+        return self.grid.m
+
+    @property
+    def n(self) -> int:
+        return self.grid.n
+
+    @property
+    def nnz(self) -> int:
+        return self.grid.nnz
+
+    @property
+    def host_nbytes(self) -> int:
+        return int(self.grid.idx.nbytes + self.grid.val.nbytes
+                   + self.grid.cnt.nbytes)
+
+    def tile_triplet(self, i: int, j: int) -> Triplet:
+        """Tile (i, j)'s (idx, val, cnt) as host views (no copy — the
+        driver only reads them to stage device transfers)."""
+        assert 0 <= i < self.g and 0 <= j < self.g, (i, j, self.g)
+        return (self.grid.idx[i, j].astype(np.int32, copy=False),
+                self.grid.val[i, j].astype(np.float32, copy=False),
+                self.grid.cnt[i, j].astype(np.int32, copy=False))

@@ -13,12 +13,14 @@ The per-block update kernel lives with the other Pallas kernels in
 """
 from repro.sgd.blocking import (BlockGrid, block_coo, block_ell,
                                 diagonal_sets, ell_to_coo)
-from repro.sgd.hybrid import hybrid_train, sgd_state_from_als
-from repro.sgd.train import (SgdConfig, SgdState, sgd_epoch, sgd_init,
-                             sgd_train)
+from repro.sgd.hybrid import (hybrid_train, run_streaming_hybrid,
+                              sgd_state_from_als)
+from repro.sgd.train import (SgdConfig, SgdState, epoch_set_order, sgd_epoch,
+                             sgd_init, sgd_train)
 
 __all__ = [
     "BlockGrid", "block_coo", "block_ell", "diagonal_sets", "ell_to_coo",
-    "SgdConfig", "SgdState", "sgd_epoch", "sgd_init", "sgd_train",
-    "hybrid_train", "sgd_state_from_als",
+    "SgdConfig", "SgdState", "epoch_set_order", "sgd_epoch", "sgd_init",
+    "sgd_train", "hybrid_train", "run_streaming_hybrid",
+    "sgd_state_from_als",
 ]

@@ -7,12 +7,20 @@ epochs from a cold start.  The hybrid runs a few ALS iterations on the
 row/column PaddedELL shards, then hands the factors to the blocked SGD
 driver *on the same rating data* (the BlockGrid is built from the very
 same shards via ``blocking.block_ell``) for cheap refinement.
+
+``run_streaming_hybrid`` is the out-of-core variant: the warm start
+streams R/R^T waves through ``outofcore.run_streaming_als`` and the
+refinement streams grid tiles through ``outofcore.run_streaming_sgd``, so
+the whole hybrid runs under the same fixed device budget — neither phase
+ever holds the full problem resident.
 """
 from __future__ import annotations
 
-from typing import Optional
+import os
+from typing import List, Optional
 
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import als as als_mod
 from repro.sgd.blocking import BlockGrid
@@ -67,8 +75,6 @@ def hybrid_train(
     als_hist: list[dict] = []
     resuming = False
     if ckpt_dir is not None:
-        import os
-
         from repro.checkpoint.store import latest_step
         resuming = (os.path.isdir(ckpt_dir)
                     and latest_step(ckpt_dir) is not None)
@@ -81,3 +87,79 @@ def hybrid_train(
         grid, sgd_cfg, test=test, train_eval=train_eval,
         init_state=state0, ckpt_dir=ckpt_dir, callback=tagged("sgd"))
     return final, als_hist + sgd_hist
+
+
+def run_streaming_hybrid(
+    ratings,                    # outofcore.RatingStore (warm-start phase)
+    als_sched,                  # outofcore.IterationSchedule
+    tiles,                      # outofcore.TileStore (refine phase)
+    sgd_sched,                  # outofcore.SgdEpochSchedule
+    als_cfg: als_mod.AlsConfig,
+    sgd_cfg: SgdConfig,
+    *,
+    test_eval=None,
+    train_eval=None,
+    ckpt_dir: Optional[str] = None,
+    keep: int = 3,
+    prefetch_depth: int = 2,
+    callback=None,
+):
+    """Out-of-core hybrid: streaming ALS warm start, streaming SGD refine.
+
+    Both phases run through the shared wave runtime under their own
+    schedules' budgets; ``ratings`` and ``tiles`` are two host-resident
+    layouts of the same rating matrix.  Returns
+    ``(FactorStore, history, (als_telemetry, sgd_telemetry))`` with history
+    records phase-tagged like ``hybrid_train``'s.  Checkpoints are
+    phase-scoped (``<ckpt_dir>/als`` and ``<ckpt_dir>/sgd`` hold
+    differently-shaped trees); once the SGD phase has committed a wave, a
+    restart skips the warm start entirely — the SGD checkpoint already
+    embeds it.
+    """
+    # imported here: repro.outofcore imports repro.sgd.train, so a
+    # module-level import back into repro.sgd would be circular
+    from repro.outofcore import (FactorStore, run_streaming_als,
+                                 run_streaming_sgd)
+
+    grid = tiles.grid
+    assert grid.m == ratings.m and grid.n == ratings.n, \
+        "RatingStore and TileStore hold different matrices"
+
+    def tagged(phase):
+        def cb(state, rec):
+            rec["phase"] = phase
+            if callback is not None:
+                callback(state, rec)
+        return cb
+
+    als_ck = sgd_ck = None
+    refine_started = False
+    if ckpt_dir is not None:
+        from repro.checkpoint.store import latest_step
+        als_ck = os.path.join(ckpt_dir, "als")
+        sgd_ck = os.path.join(ckpt_dir, "sgd")
+        refine_started = (os.path.isdir(sgd_ck)
+                          and latest_step(sgd_ck) is not None)
+
+    als_hist: List[dict] = []
+    als_tel = None
+    warm = None
+    if not refine_started:
+        fac, als_hist, als_tel = run_streaming_als(
+            ratings, als_sched, als_cfg, ckpt_dir=als_ck, keep=keep,
+            prefetch_depth=prefetch_depth, test_eval=test_eval,
+            train_eval=train_eval, callback=lambda it, rec:
+                tagged("als")(None, rec))
+        # re-block the streamed factors to the grid's padded shape: the ALS
+        # store is [m_pad, f] / [n, f], the SGD store [g*mb, f] / [g*nb, f]
+        f = als_cfg.f
+        x0 = np.zeros((grid.g * grid.mb, f), np.float32)
+        t0 = np.zeros((grid.g * grid.nb, f), np.float32)
+        x0[:grid.m] = fac.x[:grid.m]
+        t0[:grid.n] = fac.theta[:grid.n]
+        warm = FactorStore.from_arrays(x0, t0)
+    final, sgd_hist, sgd_tel = run_streaming_sgd(
+        tiles, sgd_sched, sgd_cfg, factors=warm, ckpt_dir=sgd_ck, keep=keep,
+        prefetch_depth=prefetch_depth, test_eval=test_eval,
+        train_eval=train_eval, callback=tagged("sgd"))
+    return final, als_hist + sgd_hist, (als_tel, sgd_tel)

@@ -1,15 +1,27 @@
 """Batch-Hogwild SGD epoch driver (CuMF_SGD) over a BlockGrid.
 
-One epoch walks the g conflict-free diagonal block-sets in order; every
-tile in a set touches disjoint X and Theta rows, so tile updates within a
-set commute (the lock-free property CuMF_SGD exploits — here they also
-make the epoch deterministic).  Every rating is visited exactly once per
-epoch.  The per-tile sweep is ``repro.kernels.sgd_update`` (Pallas kernel
-or jnp oracle, same dispatch vocabulary as the ALS ops).
+One epoch walks the g conflict-free diagonal block-sets in a per-epoch
+shuffled order (CuMF_SGD randomizes the schedule: a fixed order biases
+late-set blocks toward fresher factors); the permutation is PRNG-keyed on
+``(cfg.seed, epoch)`` so runs are reproducible and checkpoint resume stays
+bit-exact.  Every tile in a set touches disjoint X and Theta rows, so tile
+updates within a set commute (the lock-free property CuMF_SGD exploits —
+here they also make the epoch deterministic), and every rating is visited
+exactly once per epoch.
+
+The epoch itself is a single jitted ``lax.scan`` over the g sets: because a
+set's g tiles are disjoint in both factors, they stack into ONE
+``sgd_block_update`` call on ``[g*mb]`` user rows against the set's
+permuted ``[g*nb]`` item blocks (tile i's block-local item indices shift by
+``i*nb``).  That is O(1) host dispatches per epoch after the first trace,
+instead of the g^2 per-tile Python dispatches of the unrolled loop.  The
+per-tile sweep is ``repro.kernels.sgd_update`` (Pallas kernel or jnp
+oracle, same dispatch vocabulary as the ALS ops).
 """
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import NamedTuple, Optional
 
 import jax
@@ -18,7 +30,7 @@ import numpy as np
 
 from repro.core.objective import rmse_padded
 from repro.kernels.sgd_update import sgd_block_update
-from repro.sgd.blocking import BlockGrid, diagonal_sets
+from repro.sgd.blocking import BlockGrid
 from repro.training.optimizer import lr_schedule
 
 
@@ -68,23 +80,89 @@ def grid_triplet(grid: BlockGrid):
             jnp.asarray(grid.cnt, jnp.int32))
 
 
-def sgd_epoch(state: SgdState, gt, g: int, cfg: SgdConfig,
-              lr: float) -> SgdState:
-    """One full epoch: g diagonal sets x g independent tiles per set."""
+def epoch_set_order(seed: int, epoch: int, g: int) -> jax.Array:
+    """The epoch's diagonal-set visit order: a PRNG permutation of
+    ``range(g)`` keyed on ``(seed, epoch)`` — deterministic per epoch, so a
+    checkpoint resume replays exactly the order the killed run would have
+    used (CuMF_SGD's schedule randomization, made reproducible)."""
+    key = jax.random.fold_in(jax.random.PRNGKey(seed), epoch)
+    return jax.random.permutation(key, g)
+
+
+def sgd_tiles_update(x, theta, idx, val, cnt, lr, lam, *, mode, row_mult,
+                     col_mult, f_mult):
+    """One batch-Hogwild sweep over t mutually DISJOINT tiles, stacked
+    into a single ``sgd_block_update`` dispatch.
+
+    ``x [t, mb, f]`` / ``theta [t, nb, f]`` are tile k's two factor
+    blocks; ``idx [t, mb, K]`` holds block-local item indices.  Shifting
+    tile k's indices by ``k*nb`` turns the stack into one [t*mb] x [t*nb]
+    block update with identical semantics: in-slot collisions only ever
+    involve items of one tile, whose index ranges stay disjoint after the
+    shift.  The in-core scan epoch and the streaming SGD driver both go
+    through here — their parity depends on sharing this exact stacking.
+    """
+    t, mb, f = x.shape
+    nb = theta.shape[1]
+    K = idx.shape[-1]
+    offs = (jnp.arange(t) * nb)[:, None, None]
+    x2, t2 = sgd_block_update(
+        x.reshape(t * mb, f), theta.reshape(t * nb, f),
+        (idx + offs).reshape(t * mb, K), val.reshape(t * mb, K),
+        cnt.reshape(t * mb), lr, lam, mode=mode, row_mult=row_mult,
+        col_mult=col_mult, f_mult=f_mult)
+    return x2.reshape(t, mb, f), t2.reshape(t, nb, f)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("g", "lam", "mode", "row_mult", "col_mult", "f_mult"))
+def _scan_epoch(xb, tb, idx, val, cnt, set_order, lr, *, g, lam,
+                mode, row_mult, col_mult, f_mult):
+    """lax.scan over diagonal sets; one stacked tile sweep per set.
+
+    Set s's tiles are (i, (i+s) % g): disjoint user blocks AND disjoint
+    item blocks, so gathering the permuted item blocks ``tb[(i+s) % g]``
+    stacks the whole set into one ``sgd_tiles_update`` call.
+    """
+    ar = jnp.arange(g)
+
+    def body(carry, s):
+        xb, tb = carry
+        j = (ar + s) % g                       # item block of tile i
+        x_new, t_new = sgd_tiles_update(
+            xb, tb[j], idx[ar, j], val[ar, j], cnt[ar, j], lr, lam,
+            mode=mode, row_mult=row_mult, col_mult=col_mult, f_mult=f_mult)
+        return (x_new, tb.at[j].set(t_new)), None
+
+    (xb, tb), _ = jax.lax.scan(body, (xb, tb), set_order)
+    return xb, tb
+
+
+def sgd_epoch(state: SgdState, gt, grid: BlockGrid, cfg: SgdConfig,
+              lr: float, *, set_order=None) -> SgdState:
+    """One full epoch: g diagonal sets x g independent tiles per set.
+
+    ``grid`` supplies the authoritative block shape — ``nb`` in particular
+    must NOT be recomputed from ``state.theta.shape`` (a caller passing
+    factors padded beyond ``g*nb`` would silently mis-slice every theta
+    block), so shapes are asserted at entry instead.  ``set_order`` is the
+    epoch's set permutation (``epoch_set_order``); None keeps the canonical
+    0..g-1 order.
+    """
     idx, val, cnt = gt
-    mb, nb = idx.shape[2], -(-state.theta.shape[0] // g)
-    f = cfg.f
-    xb = state.x.reshape(g, mb, f)
-    tb = state.theta.reshape(g, nb, f)
+    g, mb, nb, f = grid.g, grid.mb, grid.nb, cfg.f
+    assert idx.shape == (g, g, mb, idx.shape[-1]), (idx.shape, g, mb)
+    assert state.x.shape == (g * mb, f), (state.x.shape, g, mb, f)
+    assert state.theta.shape == (g * nb, f), (state.theta.shape, g, nb, f)
+    if set_order is None:
+        set_order = jnp.arange(g)
     lr_t = jnp.float32(lr)     # traced, so the lr decay never retriggers jit
-    for tiles in diagonal_sets(g):
-        for i, j in tiles:
-            xi, tj = sgd_block_update(
-                xb[i], tb[j], idx[i, j], val[i, j], cnt[i, j], lr_t,
-                cfg.lam, mode=cfg.mode, row_mult=cfg.row_mult,
-                col_mult=cfg.col_mult, f_mult=cfg.f_mult)
-            xb = xb.at[i].set(xi)
-            tb = tb.at[j].set(tj)
+    xb, tb = _scan_epoch(
+        state.x.reshape(g, mb, f), state.theta.reshape(g, nb, f),
+        idx, val, cnt, jnp.asarray(set_order), lr_t, g=g,
+        lam=cfg.lam, mode=cfg.mode, row_mult=cfg.row_mult,
+        col_mult=cfg.col_mult, f_mult=cfg.f_mult)
     return SgdState(x=xb.reshape(g * mb, f), theta=tb.reshape(g * nb, f),
                     epoch=state.epoch + 1)
 
@@ -125,7 +203,8 @@ def sgd_train(
     history: list[dict] = []
     for ep in range(start, cfg.epochs):
         lr = epoch_lr(cfg, ep)
-        state = sgd_epoch(state, gt, grid.g, cfg, lr)
+        state = sgd_epoch(state, gt, grid, cfg, lr,
+                          set_order=epoch_set_order(cfg.seed, ep, grid.g))
         rec = {"epoch": ep + 1, "lr": lr}
         x, th = state.x[:m], state.theta[:n]
         if test is not None:
@@ -134,7 +213,12 @@ def sgd_train(
             rec["train_rmse"] = float(rmse_padded(x, th, *train_eval))
         history.append(rec)
         if mgr is not None:
-            mgr.save(ep + 1, {"x": state.x, "theta": state.theta})
+            # host copies, not the live device arrays: the manager commits
+            # on a background thread, and a donated/in-place update of
+            # state.x would race the writer (outofcore/driver.py snapshots
+            # the same way)
+            mgr.save(ep + 1, {"x": np.array(state.x),
+                              "theta": np.array(state.theta)})
         if callback is not None:
             callback(state, rec)
     if mgr is not None:

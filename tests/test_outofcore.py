@@ -13,8 +13,11 @@ import pytest
 from repro.core import als as als_mod
 from repro.core.partition import plan_for
 from repro.data.prefetch import Prefetcher
-from repro.outofcore import (RatingStore, SimulatedFailure, build_schedule,
-                             required_capacity_bytes, run_streaming_als)
+from repro.outofcore import (RatingStore, SimulatedFailure, TileStore,
+                             build_schedule, build_sgd_schedule,
+                             required_capacity_bytes, run_streaming_als,
+                             run_streaming_sgd)
+from repro.sgd import SgdConfig, block_ell, sgd_train
 from repro.sparse import synth
 
 SPEC = synth.SynthSpec("oc", 96, 40, 1500, 8, 0.05)
@@ -217,6 +220,133 @@ assert out.shape == (32, 8), out.shape
 assert np.abs(out - ref).max() < 1e-4, np.abs(out - ref).max()
 print("wave update on mesh OK")
 """)
+
+
+# ---------------------------------------------------------------------------
+# Streaming SGD: tile-wave schedule invariants (fast) + parity suite (slow)
+# ---------------------------------------------------------------------------
+
+def _sgd_problem(g=4, n_workers=2):
+    r, _, rte, _ = _problem()
+    grid = block_ell(r, g=g)
+    tiles = TileStore(grid)
+    sched = build_sgd_schedule(grid, SPEC.f, n_workers=n_workers)
+    return r, rte, grid, tiles, sched
+
+
+def _sgd_cfg(**kw):
+    kw.setdefault("schedule", "inverse_time")
+    kw.setdefault("decay", 1.0)
+    return SgdConfig(f=SPEC.f, lam=SPEC.lam, lr=0.1, mode="ref", seed=3, **kw)
+
+
+def test_sgd_schedule_covers_every_tile_once():
+    """Every (i, j) tile appears in exactly one wave per epoch, waves never
+    mix diagonal sets, and n_workers < g forces multiple waves per set."""
+    _, _, grid, tiles, sched = _sgd_problem(g=4, n_workers=3)   # ragged
+    g = grid.g
+    assert sched.waves_per_epoch == g * 2       # ceil(4/3) = 2 waves/set
+    seen = set()
+    for s, ws in enumerate(sched.set_waves):
+        for w in ws:
+            assert w.set_index == s
+            for i, j in w.tiles:
+                assert (j - i) % g == s          # tile belongs to its set
+                assert (i, j) not in seen
+                seen.add((i, j))
+    assert len(seen) == g * g
+    # epoch flattening follows the permuted set order and renumbers
+    order = [2, 0, 3, 1]
+    waves = sched.epoch_waves(order)
+    assert [w.index for w in waves] == list(range(sched.waves_per_epoch))
+    assert [w.set_index for w in waves] == [2, 2, 0, 0, 3, 3, 1, 1]
+    with pytest.raises(AssertionError):
+        sched.epoch_waves([0, 1, 2, 2])          # not a permutation
+
+
+def test_tile_store_views_grid():
+    _, _, grid, tiles, _ = _sgd_problem()
+    assert (tiles.g, tiles.mb, tiles.nb, tiles.K) == \
+        (grid.g, grid.mb, grid.nb, grid.K)
+    assert tiles.nnz == grid.nnz
+    idx, val, cnt = tiles.tile_triplet(1, 2)
+    np.testing.assert_array_equal(idx, grid.idx[1, 2])
+    assert np.shares_memory(val, grid.val), "tile views must not copy"
+    assert tiles.host_nbytes > 0
+
+
+@pytest.mark.slow
+def test_streaming_sgd_matches_incore():
+    """Acceptance: a forced waves >= 2 tile plan matches the in-core SGD
+    RMSE trajectory, and peak metered bytes stay under the plan capacity."""
+    r, rte, grid, tiles, sched = _sgd_problem(g=4, n_workers=2)
+    assert all(len(ws) >= 2 for ws in sched.set_waves)
+    rtest = als_mod.ell_triplet(rte)
+    cfg = _sgd_cfg(epochs=3)
+    state, hist = sgd_train(grid, cfg, test=rtest)
+    fac, shist, tel = run_streaming_sgd(tiles, sched, cfg, test_eval=rtest)
+    assert len(shist) == len(hist)
+    for a, b in zip(shist, hist):
+        assert abs(a["test_rmse"] - b["test_rmse"]) < 1e-3
+    np.testing.assert_allclose(fac.x, np.asarray(state.x), atol=1e-5)
+    np.testing.assert_allclose(fac.theta, np.asarray(state.theta), atol=1e-5)
+    # memory: under budget, and genuinely streaming (well below resident)
+    assert tel.peak_bytes <= tel.capacity_bytes
+    assert tel.peak_bytes < tiles.host_nbytes + fac.nbytes
+    assert tel.waves_run == sched.waves_per_epoch * cfg.epochs
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("kill_after", [3, 11])
+def test_streaming_sgd_kill_and_resume_bit_exact(tmp_path, kill_after):
+    """Acceptance: killed after wave ``kill_after`` (3 = mid-first-epoch,
+    11 = mid-second-epoch across the set-order reshuffle), the resumed run
+    reaches bit-identical factors."""
+    _, _, grid, tiles, sched = _sgd_problem(g=4, n_workers=2)
+    cfg = _sgd_cfg(epochs=2)
+    assert kill_after < cfg.epochs * sched.waves_per_epoch
+    ref_fac, ref_hist, _ = run_streaming_sgd(tiles, sched, cfg)
+
+    ckpt = str(tmp_path / "sgd_ckpt")
+    shutil.rmtree(ckpt, ignore_errors=True)
+    with pytest.raises(SimulatedFailure):
+        run_streaming_sgd(tiles, sched, cfg, ckpt_dir=ckpt,
+                          fail_after_waves=kill_after)
+    fac, hist, tel = run_streaming_sgd(tiles, sched, cfg, ckpt_dir=ckpt)
+    assert tel.resumed_from_step == kill_after
+    assert len(hist) == cfg.epochs - kill_after // sched.waves_per_epoch
+    np.testing.assert_array_equal(fac.x, ref_fac.x)
+    np.testing.assert_array_equal(fac.theta, ref_fac.theta)
+
+
+@pytest.mark.slow
+def test_streaming_hybrid_runs_both_phases_streamed(tmp_path):
+    """Streaming warm start + streaming refine under one budget; a restart
+    with a committed SGD checkpoint skips the ALS phase."""
+    from repro.sgd import run_streaming_hybrid
+    r, rte, grid, tiles, sched = _sgd_problem(g=4, n_workers=2)
+    rtest = als_mod.ell_triplet(rte)
+    store = RatingStore(r, q=4)
+    plan = _forced_plan(r, q=4, n_data=2, store=store)
+    als_sched = build_schedule(plan, SPEC.m, SPEC.n, n_data=2)
+    als_cfg = als_mod.AlsConfig(f=SPEC.f, lam=SPEC.lam, iters=2, mode="ref")
+    cfg = _sgd_cfg(epochs=2)
+
+    ck = str(tmp_path / "hyb")
+    fac, hist, (atel, stel) = run_streaming_hybrid(
+        store, als_sched, tiles, sched, als_cfg, cfg, test_eval=rtest,
+        ckpt_dir=ck)
+    assert [h["phase"] for h in hist] == ["als"] * 2 + ["sgd"] * 2
+    # warm start pays off: first SGD epoch starts below the cold ALS start
+    assert hist[2]["test_rmse"] < hist[0]["test_rmse"]
+    assert atel.peak_bytes <= atel.capacity_bytes
+    assert stel.peak_bytes <= stel.capacity_bytes
+    fac2, hist2, (atel2, _) = run_streaming_hybrid(
+        store, als_sched, tiles, sched, als_cfg, cfg, test_eval=rtest,
+        ckpt_dir=ck)
+    assert hist2 == [] and atel2 is None   # complete: no ALS re-run
+    np.testing.assert_array_equal(fac2.x, fac.x)
+    np.testing.assert_array_equal(fac2.theta, fac.theta)
 
 
 @pytest.mark.slow

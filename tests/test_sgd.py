@@ -182,14 +182,20 @@ def test_hybrid_resume_skips_als_warm_start(problem, tmp_path):
     np.testing.assert_allclose(final2.theta, final1.theta, atol=1e-6)
 
 
-def test_diagonal_set_order_within_set_is_irrelevant(problem):
+@pytest.mark.parametrize("shuffled", [False, True])
+def test_diagonal_set_order_within_set_is_irrelevant(problem, shuffled):
     """Conflict-freedom, observed: permuting tiles inside a set cannot
-    change the epoch result because the tiles touch disjoint factor rows."""
+    change the epoch result because the tiles touch disjoint factor rows —
+    with the canonical set order and with a PRNG-shuffled one (the rotation
+    perm maps run B's set s onto exactly run A's set s, so a shared
+    set_order preserves the equivalence)."""
     spec, grid, _, _, _, _ = problem
-    from repro.sgd.train import grid_triplet, sgd_epoch
+    from repro.sgd.train import epoch_set_order, grid_triplet, sgd_epoch
     cfg = SgdConfig(f=spec.f, lam=spec.lam, lr=0.1, epochs=1, mode="ref")
+    order = epoch_set_order(cfg.seed, 5, grid.g) if shuffled else None
     state = sgd_init(grid, cfg)
-    a = sgd_epoch(state, grid_triplet(grid), grid.g, cfg, 0.1)
+    a = sgd_epoch(state, grid_triplet(grid), grid, cfg, 0.1,
+                  set_order=order)
 
     idx, val, cnt = (np.array(grid.idx), np.array(grid.val),
                      np.array(grid.cnt))
@@ -210,10 +216,136 @@ def test_diagonal_set_order_within_set_is_irrelevant(problem):
                       theta=jnp.asarray(tb.reshape(-1, cfg.f)),
                       epoch=jnp.int32(0))
     gt2 = (jnp.asarray(idx2), jnp.asarray(val2), jnp.asarray(cnt2))
-    b = sgd_epoch(state2, gt2, grid.g, cfg, 0.1)
+    b = sgd_epoch(state2, gt2, grid, cfg, 0.1, set_order=order)
     bx = np.array(b.x).reshape(grid.g, grid.mb, cfg.f)
     bt = np.array(b.theta).reshape(grid.g, grid.nb, cfg.f)
     ax = np.array(a.x).reshape(grid.g, grid.mb, cfg.f)
     at = np.array(a.theta).reshape(grid.g, grid.nb, cfg.f)
     np.testing.assert_allclose(bx, ax[perm], atol=1e-6)
     np.testing.assert_allclose(bt, at[perm], atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# scan epoch: set-order shuffling, dispatch count, shape threading,
+# checkpoint materialization
+# ---------------------------------------------------------------------------
+
+def test_epoch_set_order_is_reproducible_permutation():
+    """Keyed on (seed, epoch): a true permutation, bit-stable across calls,
+    and actually different between epochs (the CuMF_SGD randomization)."""
+    from repro.sgd.train import epoch_set_order
+    g = 6
+    orders = [np.asarray(epoch_set_order(0, ep, g)) for ep in range(8)]
+    for o in orders:
+        assert sorted(o.tolist()) == list(range(g))
+    np.testing.assert_array_equal(
+        orders[3], np.asarray(epoch_set_order(0, 3, g)))
+    assert any(not np.array_equal(orders[0], o) for o in orders[1:]), \
+        "set order never changed across epochs"
+    # a different seed reshuffles epoch 0
+    assert any(not np.array_equal(np.asarray(epoch_set_order(s, 0, g)),
+                                  orders[0]) for s in range(1, 5))
+
+
+def _unrolled_epoch(state, gt, grid, cfg, lr, set_order):
+    """The pre-scan reference epoch: g^2 per-tile dispatches."""
+    idx, val, cnt = gt
+    g, mb, nb, f = grid.g, grid.mb, grid.nb, cfg.f
+    xb = state.x.reshape(g, mb, f)
+    tb = state.theta.reshape(g, nb, f)
+    lr_t = jnp.float32(lr)
+    for s in np.asarray(set_order).tolist():
+        for i in range(g):
+            j = (i + s) % g
+            xi, tj = sgd_block_update(
+                xb[i], tb[j], idx[i, j], val[i, j], cnt[i, j], lr_t,
+                cfg.lam, mode=cfg.mode, row_mult=cfg.row_mult,
+                col_mult=cfg.col_mult, f_mult=cfg.f_mult)
+            xb = xb.at[i].set(xi)
+            tb = tb.at[j].set(tj)
+    return SgdState(x=xb.reshape(g * mb, f), theta=tb.reshape(g * nb, f),
+                    epoch=state.epoch + 1)
+
+
+@pytest.mark.parametrize("shuffled", [False, True])
+def test_scan_epoch_matches_unrolled(problem, shuffled):
+    """Acceptance: the lax.scan epoch (stacked per-set tile sweep) produces
+    the same factors as the unrolled per-tile loop to float32 tolerance."""
+    spec, grid, _, _, _, _ = problem
+    from repro.sgd.train import epoch_set_order, grid_triplet, sgd_epoch
+    cfg = SgdConfig(f=spec.f, lam=spec.lam, lr=0.1, epochs=1, mode="ref",
+                    seed=9)
+    order = (epoch_set_order(cfg.seed, 1, grid.g) if shuffled
+             else jnp.arange(grid.g))
+    state = sgd_init(grid, cfg)
+    gt = grid_triplet(grid)
+    a = sgd_epoch(state, gt, grid, cfg, 0.1, set_order=order)
+    b = _unrolled_epoch(state, gt, grid, cfg, 0.1, order)
+    np.testing.assert_allclose(np.asarray(a.x), np.asarray(b.x),
+                               atol=1e-5, rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(a.theta), np.asarray(b.theta),
+                               atol=1e-5, rtol=1e-5)
+
+
+def test_scan_epoch_issues_o_g_dispatches(monkeypatch):
+    """Acceptance: one epoch makes O(g), not O(g^2), host-level
+    sgd_block_update calls (the scan traces the per-set stacked call once;
+    a fresh grid shape forces the trace so the count is observable)."""
+    import repro.sgd.train as train_mod
+    from repro.sgd.train import grid_triplet, sgd_epoch
+    rng = np.random.default_rng(11)
+    g = 5                       # unique shape: avoid jit-cache hits
+    rows, cols, vals = _random_coo(rng, 7 * g, 6 * g, 420)
+    grid = block_coo(rows, cols, vals, 7 * g, 6 * g, g)
+    cfg = SgdConfig(f=6, lam=0.05, lr=0.1, epochs=1, mode="ref")
+    calls = []
+    real = train_mod.sgd_block_update
+    monkeypatch.setattr(train_mod, "sgd_block_update",
+                        lambda *a, **k: calls.append(1) or real(*a, **k))
+    state = sgd_init(grid, cfg)
+    sgd_epoch(state, grid_triplet(grid), grid, cfg, 0.1)
+    assert 1 <= len(calls) <= g, f"{len(calls)} dispatches for g={g}"
+
+
+def test_sgd_epoch_rejects_overpadded_factors(problem):
+    """nb comes from the grid, not from theta's shape: factors padded past
+    g*nb (e.g. a stale pad_factor target) must fail loudly instead of
+    silently mis-slicing every theta block."""
+    spec, grid, _, _, _, _ = problem
+    from repro.sgd.train import grid_triplet, pad_factor, sgd_epoch
+    cfg = SgdConfig(f=spec.f, lam=spec.lam, lr=0.1, epochs=1, mode="ref")
+    state = sgd_init(grid, cfg)
+    bad = SgdState(x=state.x,
+                   theta=pad_factor(state.theta, grid.g * grid.nb + grid.g),
+                   epoch=state.epoch)
+    with pytest.raises(AssertionError):
+        sgd_epoch(bad, grid_triplet(grid), grid, cfg, 0.1)
+
+
+def test_sgd_train_checkpoints_host_copies(problem, tmp_path, monkeypatch):
+    """Regression: the tree handed to the async CheckpointManager must be
+    host-materialized copies, never views aliasing the live factors — a
+    later in-place/donated update would race the background writer."""
+    import repro.checkpoint as ckpt_mod
+    spec, grid, _, _, _, _ = problem
+    captured = []
+
+    class SpyManager(ckpt_mod.CheckpointManager):
+        def save(self, step, tree):
+            captured.append((step, tree))
+            super().save(step, tree)
+
+    monkeypatch.setattr(ckpt_mod, "CheckpointManager", SpyManager)
+    cfg = SgdConfig(f=spec.f, lam=spec.lam, lr=0.1, epochs=2, mode="ref",
+                    schedule="inverse_time", decay=1.0, seed=4)
+    state, _ = sgd_train(grid, cfg, ckpt_dir=str(tmp_path / "ck"))
+    assert len(captured) == 2
+    live = {"x": np.asarray(state.x), "theta": np.asarray(state.theta)}
+    for _, tree in captured:
+        for k in ("x", "theta"):
+            leaf = tree[k]
+            assert isinstance(leaf, np.ndarray), type(leaf)
+            assert not np.shares_memory(leaf, live[k]), \
+                f"checkpoint tree aliases the live {k} buffer"
+    # the final epoch's snapshot equals (but does not alias) the final state
+    np.testing.assert_array_equal(captured[-1][1]["x"], live["x"])
