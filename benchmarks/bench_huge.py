@@ -45,7 +45,8 @@ def iteration_time_s(spec, chips=256, f_pad=None):
     return max(comp, mem) + red, comp, mem, red
 
 
-def measure_outofcore(iters: int = 2, seed: int = 0) -> list[dict]:
+def measure_outofcore(iters: int = 2, seed: int = 0,
+                      scale: float = 0.02) -> list[dict]:
     """Measured streaming path: waves >= 2 on a capped simulated CPU device.
 
     Runs the real ``repro.outofcore`` driver on a shrunk Netflix recipe with
@@ -61,7 +62,7 @@ def measure_outofcore(iters: int = 2, seed: int = 0) -> list[dict]:
 
     records = []
     for q, n_data in ((4, 2), (8, 2)):
-        spec = synth.scaled(DATASETS["netflix"], 0.02, f=16)
+        spec = synth.scaled(DATASETS["netflix"], scale, f=16)
         r, _, _, _ = synth.make_synthetic_ratings(spec, seed=seed)
         store = RatingStore(r, q=q)
         acc_eps = spec.n * (spec.f * spec.f + 3 * spec.f + 1) * 4
@@ -77,7 +78,7 @@ def measure_outofcore(iters: int = 2, seed: int = 0) -> list[dict]:
         rec = {
             "name": f"outofcore_q{q}_w{len(sched.waves)}",
             "m": spec.m, "n": spec.n, "nnz": r.nnz, "f": spec.f,
-            "q": q, "n_data": n_data, "waves": len(sched.waves),
+            "p": 1, "q": q, "n_data": n_data, "waves": len(sched.waves),
             "iters": iters,
             "measured_iter_s": iter_s,
             "bytes_streamed_per_iter": tel.bytes_streamed // iters,
@@ -93,10 +94,68 @@ def measure_outofcore(iters: int = 2, seed: int = 0) -> list[dict]:
              f"{tel.peak_bytes / 2**20:.1f};cap_MiB="
              f"{tel.capacity_bytes / 2**20:.1f};streamed_MiB_per_iter="
              f"{rec['bytes_streamed_per_iter'] / 2**20:.1f}")
+    records += measure_outofcore_mesh(iters=iters, seed=seed)
     return records
 
 
-def run():
+def measure_outofcore_mesh(iters: int = 2, seed: int = 0) -> list[dict]:
+    """Measured p > 1 streaming row: the same wave driver on a real
+    (data=2, model=2) mesh — theta as p shards, waves shard-mapped, the
+    accumulate half combined by the topology-aware reduction.  Skipped
+    (with a CSV note) when fewer than 4 devices are visible; CI's
+    bench-smoke forces 8 host devices so the row is always present there.
+    """
+    import jax
+
+    from repro.core import als as als_mod
+    from repro.core.partition import streaming_acc_bytes
+    from repro.outofcore import (RatingStore, build_schedule,
+                                 required_capacity_bytes, run_streaming_als)
+    from repro.launch.mesh import make_mesh
+    from repro.sparse import synth
+
+    n_data, p, q = 2, 2, 4
+    if len(jax.devices()) < n_data * p:
+        emit("outofcore_mesh_skipped", 0.0,
+             f"needs {n_data * p} devices, have {len(jax.devices())};"
+             "run under --xla_force_host_platform_device_count=8")
+        return []
+    spec = synth.SynthSpec("netflix-mesh", 2048, 512, 80_000, 16, 0.05)
+    r, _, _, _ = synth.make_synthetic_ratings(spec, seed=seed)
+    store = RatingStore(r, q=q, p=p)
+    plan = plan_for(spec.m, spec.n, r.nnz, spec.f, p=p, q=q, n_data=n_data,
+                    fill=store.worst_fill, eps=0, buffers=4,
+                    acc_bytes=streaming_acc_bytes(spec.n, spec.f))
+    sched = build_schedule(plan, spec.m, spec.n, n_data=n_data)
+    mesh = make_mesh((n_data, p), ("data", "model"))
+    cfg = als_mod.AlsConfig(f=spec.f, lam=spec.lam, iters=iters, mode="ref")
+    t0 = time.perf_counter()
+    _, _, tel = run_streaming_als(store, sched, cfg, mesh=mesh)
+    iter_s = (time.perf_counter() - t0) / iters
+    rec = {
+        "name": f"outofcore_mesh_p{p}_q{q}_w{len(sched.waves)}",
+        "m": spec.m, "n": spec.n, "nnz": r.nnz, "f": spec.f,
+        "p": p, "q": q, "n_data": n_data, "waves": len(sched.waves),
+        "iters": iters,
+        "measured_iter_s": iter_s,
+        "bytes_streamed_per_iter": tel.bytes_streamed // iters,
+        "peak_device_bytes": tel.peak_bytes,
+        "capacity_bytes": tel.capacity_bytes,
+        "required_capacity_bytes": required_capacity_bytes(
+            store, sched, spec.f),
+        "fits": tel.peak_bytes <= tel.capacity_bytes,
+        "reduce_fast_bytes": tel.reduce_fast_bytes,
+        "reduce_slow_bytes": tel.reduce_slow_bytes,
+        "topology": tel.topology,
+    }
+    emit(rec["name"], iter_s * 1e6,
+         f"measured;mesh=data{n_data}xmodel{p};peak_MiB="
+         f"{tel.peak_bytes / 2**20:.1f};cap_MiB="
+         f"{tel.capacity_bytes / 2**20:.1f};reduce={tel.topology}")
+    return [rec]
+
+
+def run(quick: bool = False):
     for name, spec in DATASETS.items():
         t, comp, mem, red = iteration_time_s(spec)
         plan = plan_partitions(spec.m, spec.n, spec.nnz, spec.f)
@@ -110,7 +169,9 @@ def run():
             derived = (f"modeled_iter_s={t:.1f};usd_per_iter={cost_per_iter:.2f};"
                        f"plan=p{plan.p}q{plan.q};fits={plan.fits}")
         emit(f"fig11_huge_{name}", t * 1e6, derived)
-    return measure_outofcore()
+    # quick (CI smoke): fewer iterations on a smaller shrink factor
+    return measure_outofcore(iters=1 if quick else 2,
+                             scale=0.008 if quick else 0.02)
 
 
 if __name__ == "__main__":

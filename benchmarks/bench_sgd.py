@@ -99,6 +99,31 @@ def run(quick: bool = False):
                  peak_bytes=tel.peak_bytes,
                  bytes_streamed=tel.bytes_streamed)
     assert rec["peak_bytes"] <= rec["capacity_bytes"], rec
+
+    # p > 1 mesh row: the same tile waves sharded one-tile-per-device over a
+    # (data, model) mesh.  Skipped (with a CSV note) below 8 devices; CI's
+    # bench-smoke forces 8 host devices so the row is always present there.
+    import jax
+    if len(jax.devices()) >= 8:
+        from repro.launch.mesh import make_mesh
+        mesh = make_mesh((4, 2), ("data", "model"))
+        points, cb = _timed_curve()
+        _, _, mtel = run_streaming_sgd(TileStore(grid), sched, sgd_cfg,
+                                       test_eval=rtest, mesh=mesh,
+                                       callback=cb)
+        mrec = record("sgd_stream_mesh", points, sgd_cfg.epochs,
+                      waves_per_epoch=sched.waves_per_epoch,
+                      mesh_shape={"data": 4, "model": 2},
+                      capacity_bytes=mtel.capacity_bytes,
+                      peak_bytes=mtel.peak_bytes,
+                      bytes_streamed=mtel.bytes_streamed)
+        assert mrec["peak_bytes"] <= mrec["capacity_bytes"], mrec
+        assert abs(mrec["final_rmse"] - rec["final_rmse"]) < 1e-3, \
+            (mrec["final_rmse"], rec["final_rmse"])
+    else:
+        emit("sgd_stream_mesh_skipped", 0.0,
+             f"needs 8 devices, have {len(jax.devices())};"
+             "run under --xla_force_host_platform_device_count=8")
     return records
 
 

@@ -56,6 +56,23 @@ solver-generic — schedules are built from abstract wave work items):
         --out-of-core --solver sgd --g 4 --n-data 2
     PYTHONPATH=src python examples/train_als_netflix.py --small \
         --out-of-core --solver hybrid --iters 2 --epochs 16
+
+``--mesh DATA,MODEL`` (requires ``--out-of-core``) runs the waves on a
+*real* ``(data, model)`` device mesh instead of one simulated device:
+``--mesh 2,2`` streams each wave's batches across 2 data-axis devices with
+theta held as p = 2 model shards (each device materializes only its
+``[n/p, f]`` shard plus its column block of the wave's R slice), solve-X
+waves dispatch through the shard-mapped SU-ALS update, and the
+accumulate-Theta partial Hermitians are combined per data shard by the
+topology-aware staged reduction (``distributed.reduce``).  The data-axis
+size overrides ``--n-data``.  On CPU, force enough host devices first:
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+    PYTHONPATH=src python examples/train_als_netflix.py --small \
+        --out-of-core --mesh 2,2 --device-mb 8
+
+``--mesh`` composes with every solver: ``sgd``/``hybrid`` shard each tile
+wave one-tile-per-device over the joint (data, model) axes.
 """
 import argparse
 import os
@@ -69,27 +86,59 @@ from repro.core.partition import plan_for, plan_partitions
 from repro.sparse import synth
 
 
-def _als_store_and_schedule(spec, r, args):
+def _build_mesh(args):
+    """--mesh DATA,MODEL -> (Mesh, p); (None, 1) when not requested."""
+    if not getattr(args, "mesh", None):
+        return None, 1
+    import jax
+
+    from repro.launch.mesh import make_mesh
+
+    d, p = (int(x) for x in args.mesh.split(","))
+    ndev = len(jax.devices())
+    if ndev < d * p:
+        raise SystemExit(
+            f"--mesh {args.mesh} needs {d * p} devices but only {ndev} "
+            f"visible; on CPU export XLA_FLAGS=--xla_force_host_platform_"
+            f"device_count={d * p} (or more) first")
+    args.n_data = d                # the data axis IS the wave width
+    print(f"mesh: data={d} x model={p} on {ndev} visible devices")
+    return make_mesh((d, p), ("data", "model")), p
+
+
+def _als_store_and_schedule(spec, r, args, p=1):
     """Capped-capacity ALS wave plan: store + schedule (shared with hybrid)."""
+    from repro.core.partition import streaming_acc_bytes
     from repro.outofcore import (RatingStore, build_schedule,
                                  required_capacity_bytes)
 
     cap = args.device_mb << 20
-    plan = plan_partitions(spec.m, spec.n, r.nnz, spec.f, hbm_bytes=cap,
-                           n_data=args.n_data, fill=r.fill, eps=cap // 8)
-    if plan.waves < 2:     # cap small enough that streaming actually waves
-        plan = plan_for(spec.m, spec.n, r.nnz, spec.f, p=1,
+    if p == 1:
+        plan = plan_partitions(spec.m, spec.n, r.nnz, spec.f, hbm_bytes=cap,
+                               n_data=args.n_data, fill=r.fill, eps=cap // 8)
+    if p > 1 or plan.waves < 2:   # force waves >= 2 (and the requested p)
+        plan = plan_for(spec.m, spec.n, r.nnz, spec.f, p=p,
                         q=2 * args.n_data, n_data=args.n_data,
                         hbm_bytes=cap, fill=r.fill, eps=cap // 8, buffers=4)
 
-    store = RatingStore(r, q=plan.q)
+    if spec.n % p:
+        raise SystemExit(f"n={spec.n} is not divisible by the model axis "
+                         f"size p={p}; pick a p that divides n")
+    store = RatingStore(r, q=plan.q, p=p)
     # re-cost the chosen (p, q) with the store's real padding fills and the
     # double-buffer count (depth=2 queued + loader-held + consumed): that
-    # total is the budget the meter reports against
-    acc_eps = spec.n * (spec.f * spec.f + 3 * spec.f + 1) * 4
-    plan = plan_for(spec.m, spec.n, r.nnz, spec.f, p=plan.p, q=plan.q,
-                    n_data=args.n_data, hbm_bytes=cap,
-                    fill=store.worst_fill, eps=acc_eps, buffers=4)
+    # total is the budget the meter reports against.  p > 1 prices the
+    # Hermitian accumulators as their own p-sharded term.
+    if p > 1:
+        plan = plan_for(spec.m, spec.n, r.nnz, spec.f, p=p, q=plan.q,
+                        n_data=args.n_data, hbm_bytes=cap,
+                        fill=store.worst_fill, eps=cap // 8, buffers=4,
+                        acc_bytes=streaming_acc_bytes(spec.n, spec.f))
+    else:
+        acc_eps = spec.n * (spec.f * spec.f + 3 * spec.f + 1) * 4
+        plan = plan_for(spec.m, spec.n, r.nnz, spec.f, p=plan.p, q=plan.q,
+                        n_data=args.n_data, hbm_bytes=cap,
+                        fill=store.worst_fill, eps=acc_eps, buffers=4)
     print(f"out-of-core plan: {plan.describe()}")
     sched = build_schedule(plan, spec.m, spec.n, n_data=args.n_data)
     need = required_capacity_bytes(store, sched, spec.f)
@@ -132,10 +181,11 @@ def _tel_summary(tel, ckpt):
 def run_out_of_core(spec, r, rte, args):
     """Wave-streaming path, all solvers (see the module docstring matrix)."""
     rtest = als_mod.ell_triplet(rte)
+    mesh, p = _build_mesh(args)
 
     if args.solver == "als":
         from repro.outofcore import run_streaming_als
-        store, sched = _als_store_and_schedule(spec, r, args)
+        store, sched = _als_store_and_schedule(spec, r, args, p=p)
         cfg = als_mod.AlsConfig(f=spec.f, lam=spec.lam, iters=args.iters,
                                 mode="ref", batch_rows=16_384)
 
@@ -149,8 +199,13 @@ def run_out_of_core(spec, r, rte, args):
         # accumulators) is shaped differently from the in-core ALS one
         ckpt = os.path.join(args.ckpt, "oc_als")
         _, _, tel = run_streaming_als(store, sched, cfg, ckpt_dir=ckpt,
-                                      test_eval=rtest, callback=progress)
+                                      test_eval=rtest, mesh=mesh,
+                                      callback=progress)
         print(_tel_summary(tel, ckpt))
+        if mesh is not None:
+            print(f"reduction {tel.topology}: "
+                  f"{tel.reduce_fast_bytes/2**20:.2f}MiB fast-link, "
+                  f"{tel.reduce_slow_bytes/2**20:.2f}MiB slow-link")
         return
 
     def progress(_state, rec):
@@ -171,17 +226,17 @@ def run_out_of_core(spec, r, rte, args):
         tiles, sched = _sgd_tiles_and_schedule(spec, r, args)
         _, _, tel = run_streaming_sgd(tiles, sched, SgdConfig(**sgd_cfg_kw),
                                       ckpt_dir=ckpt, test_eval=rtest,
-                                      callback=progress)
+                                      mesh=mesh, callback=progress)
         print(_tel_summary(tel, ckpt))
     else:                       # hybrid: both phases stream
         from repro.sgd import SgdConfig, run_streaming_hybrid
-        store, als_sched = _als_store_and_schedule(spec, r, args)
+        store, als_sched = _als_store_and_schedule(spec, r, args, p=p)
         tiles, sgd_sched = _sgd_tiles_and_schedule(spec, r, args)
         warm = als_mod.AlsConfig(f=spec.f, lam=spec.lam, iters=args.iters,
                                  mode="ref", batch_rows=16_384)
         _, _, (atel, stel) = run_streaming_hybrid(
             store, als_sched, tiles, sgd_sched, warm, SgdConfig(**sgd_cfg_kw),
-            ckpt_dir=ckpt, test_eval=rtest, callback=progress)
+            ckpt_dir=ckpt, test_eval=rtest, mesh=mesh, callback=progress)
         for phase, tel in (("als", atel), ("sgd", stel)):
             if tel is not None:
                 print(f"[{phase}] " + _tel_summary(tel, ckpt))
@@ -248,7 +303,18 @@ def main():
                     help="simulated device capacity for --out-of-core")
     ap.add_argument("--n-data", type=int, default=2,
                     help="simulated data-axis size (batches per wave)")
+    ap.add_argument("--mesh", default=None, metavar="DATA,MODEL",
+                    help="run the --out-of-core waves on a real (data, "
+                         "model) device mesh, e.g. --mesh 2,2 (p=2 theta "
+                         "shards + topology-aware reduction); overrides "
+                         "--n-data with the data-axis size")
     args = ap.parse_args()
+    if args.mesh and not args.out_of_core:
+        # checked here, not in _build_mesh: the in-core paths never reach
+        # _build_mesh, and silently ignoring --mesh would let a user think
+        # they measured the mesh path
+        ap.error("--mesh requires --out-of-core (the in-core paths use "
+                 "their own sharding entry points)")
 
     if args.full:
         spec = synth.SynthSpec("netflix", 480_189, 17_770, 99_000_000,

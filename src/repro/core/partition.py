@@ -37,8 +37,15 @@ class PartitionPlan:
                 f"total={self.bytes_per_device / GiB:.3f}GiB fits={self.fits} [{t}]")
 
 
+def streaming_acc_bytes(n: int, f: int, dtype_bytes: int = 4) -> int:
+    """Resident accumulate-Theta state of a streaming run: the A [n, f, f],
+    B [n, f], c [n] Hermitian accumulators (GLOBAL size — the planner
+    divides by p, each model shard owning only its theta rows' systems)."""
+    return n * (f * f + f + 1) * dtype_bytes
+
+
 def _bytes_per_device(m, n, nnz, f, p, q, fill=1.5, dtype_bytes=4, eps=512 << 20,
-                      buffers=1):
+                      buffers=1, acc_bytes=0):
     terms = {
         "X_batch": m * f * dtype_bytes // q,
         "Theta_shard": n * f * dtype_bytes // p,
@@ -49,6 +56,10 @@ def _bytes_per_device(m, n, nnz, f, p, q, fill=1.5, dtype_bytes=4, eps=512 << 20
         "B_batch": m * f * dtype_bytes // q,
         "eps": eps,
     }
+    if acc_bytes:
+        # streaming accumulate-Theta residents, p-sharded like Theta: each
+        # model shard holds only its own theta rows' accumulated systems
+        terms["Herm_acc"] = acc_bytes // p
     return sum(terms.values()), terms
 
 
@@ -105,6 +116,7 @@ def plan_for(
     dtype_bytes: int = 4,
     eps: int = 512 << 20,
     buffers: int = 1,
+    acc_bytes: int = 0,
 ) -> PartitionPlan:
     """Cost a *given* (p, q) choice — the forced-plan entry point.
 
@@ -113,10 +125,13 @@ def plan_for(
     example caps the simulated device).  ``buffers`` counts how many R-shard
     buffers stay device-resident at once: 1 is the in-core bound of eq. (8),
     an out-of-core run double-buffering ``depth`` shards ahead needs
-    ``depth + 1`` (§4.4 preload).
+    ``depth + 1`` (§4.4 preload).  ``acc_bytes`` prices the streaming
+    accumulate-Theta residents (``streaming_acc_bytes(n, f)``) as their own
+    p-sharded term — each model shard owns 1/p of the accumulated systems —
+    instead of overloading the flat ``eps`` headroom.
     """
     total, terms = _bytes_per_device(
-        m, n, nnz, f, p, q, fill, dtype_bytes, eps, buffers)
+        m, n, nnz, f, p, q, fill, dtype_bytes, eps, buffers, acc_bytes)
     return PartitionPlan(p, q, total, terms, total < hbm_bytes, -(-q // n_data))
 
 

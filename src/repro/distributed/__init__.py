@@ -2,7 +2,11 @@
 
 - collectives.py : one-phase (flat) and two-phase (topology-aware) parallel
                    reduction — paper §4.2 mapped to reduce-scatter on ICI/DCI.
-- su_als.py      : SU-ALS (paper Alg. 3) under shard_map.
+- reduce.py      : the same two-phase scheme as a host-scheduled staged
+                   reduction (ring within fast domains, tree across them) —
+                   combines the streaming drivers' per-data-shard partials.
+- su_als.py      : SU-ALS (paper Alg. 3) under shard_map, plus the per-wave
+                   mesh entry points the out-of-core drivers dispatch through.
 - sharding.py    : PartitionSpec policies for the LM stack (DP/FSDP/TP/SP/EP).
 - flash_decode.py: sequence-sharded decode attention (partial-softmax psum).
 """
@@ -12,13 +16,33 @@ from repro.distributed.collectives import (
     hierarchical_reduce_scatter,
     collective_bytes_reduce,
 )
-from repro.distributed.su_als import su_als_update, make_su_als_fns, shard_ratings
+from repro.distributed.reduce import (
+    DeviceTopology,
+    allreduce_oracle,
+    linear_topology,
+    reduce_traffic,
+    topology_reduce,
+)
+from repro.distributed.su_als import (
+    make_su_als_fns,
+    make_wave_herm_fn,
+    make_wave_update_fn,
+    shard_ratings,
+    su_als_update,
+)
 
 __all__ = [
-    "reduce_scatter_flat",
-    "hierarchical_reduce_scatter",
+    "DeviceTopology",
+    "allreduce_oracle",
     "collective_bytes_reduce",
-    "su_als_update",
+    "hierarchical_reduce_scatter",
+    "linear_topology",
     "make_su_als_fns",
+    "make_wave_herm_fn",
+    "make_wave_update_fn",
+    "reduce_scatter_flat",
+    "reduce_traffic",
     "shard_ratings",
+    "su_als_update",
+    "topology_reduce",
 ]

@@ -25,11 +25,19 @@ from typing import Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax import lax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro import compat
 from repro.kernels import ops as kops
+
+
+def _col_axes(mesh: Mesh) -> tuple[tuple[str, ...], object]:
+    """(col_axes, col_dim spec entry) — cuMF's p axes, fast -> slow."""
+    col_axes = tuple(a for a in ("model", "pod") if a in mesh.axis_names)
+    col_dim = col_axes[::-1] if len(col_axes) > 1 else col_axes[0]
+    return col_axes, col_dim
 
 
 def su_als_update(
@@ -200,13 +208,11 @@ def make_wave_update_fn(
     update_x, _, _ = make_su_als_fns(
         mesh, lam, scheme=scheme, mode=mode,
         tm=tm, tk=tk, tb=tb, f_mult=f_mult, row_block=row_block)
-    col_axes = tuple(a for a in ("model", "pod") if a in mesh.axis_names)
-    col_dim = col_axes[::-1] if len(col_axes) > 1 else col_axes[0]
+    col_axes, col_dim = _col_axes(mesh)
     rows_sh = NamedSharding(mesh, P("data", col_dim))
     fixed_sh = NamedSharding(mesh, P(col_dim, None))
 
     def update_slice(fixed, idx, val, cnt):
-        import numpy as np
         fixed_d = jax.device_put(fixed, fixed_sh)
         idx_d = jax.device_put(idx, rows_sh)
         val_d = jax.device_put(val, rows_sh)
@@ -216,13 +222,72 @@ def make_wave_update_fn(
     return update_slice
 
 
+def make_wave_herm_fn(
+    mesh: Mesh,
+    lam: float,
+    *,
+    mode: str = "ref",
+    tm: int = 8, tk: int = 128, f_mult: int = 128,
+):
+    """Accumulate-Theta mesh entry point for the out-of-core wave driver.
+
+    One call computes the partial Hermitians of one wave on the real mesh:
+    device (d, k) holds data-shard ``d``'s fresh X slice plus *only* model
+    shard ``k``'s rows of that batch's R^T shard, and produces the partial
+    (A, B) for its owned theta rows (eq. 5-7 with the weighted-lambda
+    diagonal, which telescopes over data shards).  Crucially there is **no
+    cross-device reduction inside the program**: the per-data-shard partials
+    come back to the host with the "data" axis intact, where the driver
+    accumulates them across waves and combines them once per half-iteration
+    through ``distributed.reduce.topology_reduce`` — the paper's explicitly
+    host-scheduled Fig. 5 reduction, rather than an opaque psum.
+
+    Expected stacks (host or device):
+      x_stack [n_data, rows, f]   fresh X slices, one per data shard
+      idxT/valT [n_data, n, K]    R^T shards, theta rows over the col axes
+      cntT   [n_data, n]          per-shard local nnz counts
+    Returns host (A [n_data, n, f, f], B [n_data, n, f]) float32 partials.
+    """
+    _, col_dim = _col_axes(mesh)
+    in_specs = (
+        P("data", None, None),       # x_stack: replicated over col axes
+        P("data", col_dim, None),    # idxT: theta rows over col axes
+        P("data", col_dim, None),    # valT
+        P("data", col_dim),          # cntT
+    )
+    out_specs = (P("data", col_dim, None, None),   # A partials, un-reduced
+                 P("data", col_dim, None))         # B partials
+
+    def inner(x_loc, i_loc, v_loc, c_loc):
+        # diag_fallback=False: a locally-empty theta row may be nonempty
+        # globally — the guard is applied after the topology reduce
+        A, B = kops.fused_herm(
+            x_loc[0], i_loc[0], v_loc[0], c_loc[0], lam,
+            mode=mode, tm=tm, tk=tk, f_mult=f_mult, diag_fallback=False)
+        return A[None], B[None]
+
+    mapped = jax.jit(compat.shard_map(
+        inner, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+        check_vma=False))
+    x_sh = NamedSharding(mesh, P("data", None, None))
+    rt_sh = NamedSharding(mesh, P("data", col_dim, None))
+    cnt_sh = NamedSharding(mesh, P("data", col_dim))
+
+    def herm_stack(x_stack, idxT, valT, cntT):
+        A, B = mapped(jax.device_put(x_stack, x_sh),
+                      jax.device_put(idxT, rt_sh),
+                      jax.device_put(valT, rt_sh),
+                      jax.device_put(cntT, cnt_sh))
+        return np.asarray(A), np.asarray(B)
+
+    return herm_stack
+
+
 def shard_ratings(ell_parts, mesh: Mesh):
     """partition_padded output ([P, m, K] arrays) -> device arrays laid out
     for make_su_als_fns: idx/val [m, P*K] and cnt [m, P] with the right
     NamedSharding placements."""
-    import numpy as np
-    col_axes = tuple(a for a in ("model", "pod") if a in mesh.axis_names)
-    col_dim = col_axes[::-1] if len(col_axes) > 1 else col_axes[0]
+    col_axes, col_dim = _col_axes(mesh)
     Pn, m, K = ell_parts.idx.shape
     idx = np.transpose(ell_parts.idx, (1, 0, 2)).reshape(m, Pn * K)
     val = np.transpose(ell_parts.val, (1, 0, 2)).reshape(m, Pn * K)

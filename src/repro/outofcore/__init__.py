@@ -4,9 +4,24 @@ Implements cuMF's §4.3/§4.4 out-of-core batching as a first-class subsystem.
 Paper vocabulary -> implementation map:
 
 - **p** (Theta column shards, data parallelism): the planner's
-  ``PartitionPlan.p``.  The streaming driver executes one p-shard's view
-  (p = 1 on a single simulated device); multi-p runs place each wave on a
-  real mesh through ``distributed.su_als.make_wave_update_fn``.
+  ``PartitionPlan.p``.  With ``p = 1`` the streaming driver executes one
+  model-shard's view on a single simulated device; with ``mesh=`` (a real
+  ``(data, model)`` mesh) and a ``RatingStore(p=...)``, every wave runs
+  shard-mapped — solve-X through ``distributed.su_als.make_wave_update_fn``,
+  accumulate-Theta through ``make_wave_herm_fn`` with the per-data-shard
+  partials combined by ``distributed.reduce.topology_reduce``.
+
+  **p-sharded theta ownership rules** (mesh streaming):
+
+  1. ``FactorStore.theta`` stays one host array, but model shard ``k``
+     *owns* the contiguous row range ``[k*n/p, (k+1)*n/p)`` —
+     ``read_shard``/``write_shard`` are the only sanctioned shard IO.
+  2. A device only ever materializes its own ``[n/p, f]`` theta shard
+     (plus the wave's R / R^T slice for its coordinates); nothing outside
+     the final all-gather of solved X rows replicates theta.
+  3. Only the owning shard writes its theta rows, and only after the
+     topology reduce of the half's full partial sums — so shard writes
+     never race and never see partially-reduced systems.
 - **q** (X row batches, model parallelism): ``PartitionPlan.q``, made
   explicit as ``core.partition.QBatch`` row ranges.  ``store.RatingStore``
   keeps R row-major for the solve-X half and R^T column-partitioned into the
@@ -31,8 +46,9 @@ work items (``schedule.WaveItem``) and the drivers share one streaming
 runtime (``runtime`` — meter, telemetry, per-wave checkpointer).  Beyond
 the ALS halves above, ``run_streaming_sgd`` streams a CuMF_SGD
 ``BlockGrid``'s diagonal-set tiles (``schedule.TileWave``) through the same
-budget, so the SGD and hybrid solvers factorize matrices larger than device
-memory too.
+budget — with ``mesh=`` each wave's tiles go one-per-device over the joint
+(data, model) axes — so the SGD and hybrid solvers factorize matrices
+larger than device memory too.
 """
 from repro.outofcore.driver import run_streaming_als
 from repro.outofcore.runtime import (MemoryMeter, SimulatedFailure,

@@ -20,12 +20,33 @@ A ``MemoryMeter`` tracks the *simulated device* footprint: the meter models
 one device of the ``n_data`` axis (wave payloads are divided by ``n_data``;
 replicated residents — the fixed factor, the accumulators — are counted in
 full), which is what the planner's eq. (8) budget prices.
+
+**Mesh streaming** (``mesh=`` set): the same schedule executes on a real
+``(data, model)`` device mesh — the paper's full data x model parallelism
+instead of one model-shard's simulated view:
+
+- the solve-X half dispatches each wave through
+  ``distributed.su_als.make_wave_update_fn`` (shard-mapped SU-ALS: local
+  partial Hermitians from each device's theta shard, psum-scatter over the
+  model axis, p-way parallel solve, gather);
+- theta lives as ``p`` model shards — each device holds only its
+  ``[n/p, f]`` shard plus its column block of the wave's R slice, and the
+  meter prices exactly that;
+- the accumulate-Theta half computes per-(data, model) partial Hermitians
+  on the mesh (``make_wave_herm_fn``) with **no in-program reduction**:
+  each data shard accumulates its own partials across waves (float64 on
+  host, standing in for device-resident partial state), and the half ends
+  with ``distributed.reduce.topology_reduce`` — the paper's Fig. 5b
+  intra-socket-ring-then-inter-socket-tree schedule, validated bit-for-bit
+  against the flat all-reduce oracle — before each model shard solves and
+  writes back its own theta rows.
 """
 from __future__ import annotations
 
 import time
 from typing import Callable, List, Optional
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -42,14 +63,36 @@ __all__ = ["MemoryMeter", "SimulatedFailure", "StreamTelemetry",
            "run_streaming_als"]
 
 
-def _zeros_ckpt_tree(m_pad: int, n: int, f: int) -> dict:
+def _zeros_ckpt_tree(m_pad: int, n: int, f: int, n_dev: int = 0) -> dict:
+    """Checkpoint structure.  The acc leaves are committed EMPTY (zero rows)
+    by solve-X-half saves — restore never reads them there, and shipping
+    full-sized zeros would dominate the per-wave checkpoint I/O — and are
+    replaced with the live accumulators by mid-accumulate-half saves: the
+    serial f32 partial sums, or, on the mesh path (``n_dev`` > 0), the
+    PER-DATA-SHARD float64 partials so a resume replays the topology-aware
+    reduction bit-exactly from the same summands.
+    """
+    acc_dt = np.float64 if n_dev else np.float32
+    lead = (n_dev,) if n_dev else ()
     return {
         "x": np.zeros((m_pad, f), np.float32),
         "theta": np.zeros((n, f), np.float32),
-        "a_acc": np.zeros((n, f, f), np.float32),
-        "b_acc": np.zeros((n, f), np.float32),
-        "c_acc": np.zeros((n,), np.float32),
+        "a_acc": np.zeros(lead + (0, f, f), acc_dt),
+        "b_acc": np.zeros(lead + (0, f), acc_dt),
+        "c_acc": np.zeros(lead + (0,), acc_dt),
     }
+
+
+def _mesh_axes(mesh) -> tuple[int, int, object]:
+    """(n_data, p, col_dim spec entry) of a streaming mesh."""
+    from repro.distributed.su_als import _col_axes
+    assert "data" in mesh.axis_names, mesh.axis_names
+    col_axes, col_dim = _col_axes(mesh)
+    assert col_axes, f"mesh needs a model axis, got {mesh.axis_names}"
+    p = 1
+    for a in col_axes:
+        p *= mesh.shape[a]
+    return mesh.shape["data"], p, col_dim
 
 
 def run_streaming_als(
@@ -67,14 +110,23 @@ def run_streaming_als(
     update_rows_fn: Optional[Callable] = None,
     partial_herm_fn: Optional[Callable] = None,
     solve_acc_fn: Optional[Callable] = None,
+    mesh=None,
+    topology=None,
     callback=None,
 ) -> tuple[FactorStore, List[dict], StreamTelemetry]:
     """Run ``cfg.iters`` streaming ALS iterations of ``sched`` over ``ratings``.
 
     Returns (factor store, per-iteration history, telemetry).  With
     ``ckpt_dir`` set the run resumes from the latest committed wave; the
-    ``*_fn`` hooks default to the in-process ``core.als`` entry points and
-    accept e.g. ``distributed.su_als.make_wave_update_fn`` on a real mesh.
+    ``*_fn`` hooks default to the in-process ``core.als`` entry points.
+
+    With ``mesh`` set (axes ``("data", "model")``, sizes matching
+    ``sched.n_data`` and ``sched.p``) every wave executes shard-mapped on
+    the real mesh and theta is handled as p model shards; ``topology`` is
+    the ``distributed.reduce.DeviceTopology`` of the data axis for the
+    accumulate-half reduction (default: fast domains of 2, the paper's
+    2-GPUs-per-PCIe-switch machine).  ``partial_herm_fn`` is unused on the
+    mesh path (the shard-mapped ``make_wave_herm_fn`` replaces it).
     """
     assert ratings.m_pad == sched.m_pad and ratings.n == sched.n, \
         "RatingStore and IterationSchedule were built for different shapes"
@@ -82,6 +134,7 @@ def run_streaming_als(
     m_pad, n, n_data = sched.m_pad, sched.n, sched.n_data
     W = len(sched.waves)
     wpi = sched.waves_per_iteration            # 2 * W checkpoint steps/iter
+    user_update_fn = update_rows_fn            # explicit hook (mesh override)
     update_rows_fn = update_rows_fn or (
         lambda fixed, i, v, c: als_mod.update_rows(fixed, i, v, c, cfg))
     partial_herm_fn = partial_herm_fn or (
@@ -89,8 +142,32 @@ def run_streaming_als(
     solve_acc_fn = solve_acc_fn or (
         lambda A, B, c: als_mod.solve_accumulated(A, B, c, cfg))
 
+    p = 1
+    if mesh is not None:
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.distributed import reduce as dreduce
+        from repro.distributed.su_als import (make_wave_herm_fn,
+                                              make_wave_update_fn)
+        mesh_n_data, p, col_dim = _mesh_axes(mesh)
+        assert mesh_n_data == n_data, \
+            f"mesh data axis {mesh_n_data} != schedule n_data {n_data}"
+        assert p == sched.p == ratings.p, (p, sched.p, ratings.p)
+        assert n % p == 0, (n, p)
+        topo = topology or dreduce.linear_topology(n_data, group_size=2)
+        assert topo.n_devices == n_data, (topo.describe(), n_data)
+        wave_update = make_wave_update_fn(
+            mesh, cfg.lam, mode=cfg.mode,
+            tm=cfg.tm, tk=cfg.tk, tb=cfg.tb, f_mult=cfg.f_mult)
+        wave_herm = make_wave_herm_fn(
+            mesh, cfg.lam, mode=cfg.mode,
+            tm=cfg.tm, tk=cfg.tk, f_mult=cfg.f_mult)
+        rows_sh = NamedSharding(mesh, P("data", col_dim))
+        fixed_sh = NamedSharding(mesh, P(col_dim, None))
+
     meter = MemoryMeter()
     tel = StreamTelemetry(capacity_bytes=sched.capacity_bytes)
+    if mesh is not None:
+        tel.topology = topo.describe()
     t_start = time.perf_counter()
 
     mgr = CheckpointManager(ckpt_dir, keep=keep) if ckpt_dir else None
@@ -98,7 +175,8 @@ def run_streaming_als(
     start_step = 0
     if mgr is not None:
         tree, start_step = mgr.restore_or_init(
-            _zeros_ckpt_tree(m_pad, n, f), lambda: None)
+            _zeros_ckpt_tree(m_pad, n, f, n_data if mesh is not None else 0),
+            lambda: None)
         if start_step:
             factors = FactorStore.from_arrays(tree["x"], tree["theta"])
             if start_step % wpi > W:       # killed mid-accumulate-Theta
@@ -114,14 +192,15 @@ def run_streaming_als(
 
     def _save(step: int, acc=None):
         def tree_fn():
-            tree = _zeros_ckpt_tree(m_pad, n, f)
+            tree = _zeros_ckpt_tree(m_pad, n, f,
+                                    n_data if mesh is not None else 0)
             # snapshot copies: the manager commits async while later waves
             # keep mutating the live factor arrays
             tree["x"], tree["theta"] = factors.x.copy(), factors.theta.copy()
             if acc is not None:
-                tree["a_acc"] = np.asarray(acc[0])
-                tree["b_acc"] = np.asarray(acc[1])
-                tree["c_acc"] = np.asarray(acc[2])
+                tree["a_acc"] = np.asarray(acc[0], tree["a_acc"].dtype)
+                tree["b_acc"] = np.asarray(acc[1], tree["b_acc"].dtype)
+                tree["c_acc"] = np.asarray(acc[2], tree["c_acc"].dtype)
             return tree
         ckpt.save(step, tree_fn)
 
@@ -220,16 +299,150 @@ def run_streaming_als(
             meter.free("acc")
 
     # ------------------------------------------------------------------
+    # Mesh halves: the same waves, shard-mapped on the real (data, model)
+    # mesh with theta as p shards and a host-scheduled partial reduction.
+    # ------------------------------------------------------------------
+    def _x_half_mesh(it: int, first_wave: int):
+        theta_dev = jax.device_put(factors.theta, fixed_sh)
+        meter.alloc("fixed_theta", factors.theta.nbytes // p)  # one shard
+        full_rows = sched.waves[0].rows          # n_data * rows-per-batch
+        scratch = (full_rows * (f * f + 2 * f) * 4) // n_data
+        custom_update = user_update_fn or wave_update
+
+        def gen():
+            for wave in sched.waves[first_wave:]:
+                yield wave, ratings.x_slice_mesh_triplet(
+                    wave.row_start, wave.row_stop)
+
+        def put(item):
+            wave, (idx, val, cnt) = item
+            nb = int(idx.nbytes + val.nbytes + cnt.nbytes)
+            # per-device share: one batch's rows x one model column block
+            meter.alloc(f"xwave{wave.index}", nb // (len(wave.batches) * p))
+            pad = full_rows - idx.shape[0]
+            if pad:      # ragged last wave: empty rows solve to x_u = 0
+                idx = np.pad(idx, ((0, pad), (0, 0)))
+                val = np.pad(val, ((0, pad), (0, 0)))
+                cnt = np.pad(cnt, ((0, pad), (0, 0)))
+            dev = (jax.device_put(idx, rows_sh),
+                   jax.device_put(val, rows_sh),
+                   jax.device_put(cnt, rows_sh))
+            return wave, dev, nb
+
+        try:
+            with Prefetcher(gen(), depth=prefetch_depth, put=put) as pf:
+                for wave, (idx, val, cnt), nb in pf:
+                    meter.alloc("x_scratch", scratch)
+                    rows = np.asarray(custom_update(theta_dev, idx, val, cnt))
+                    meter.free("x_scratch")
+                    factors.write_slice("x", wave.row_start, wave.row_stop,
+                                        rows[:wave.rows])
+                    meter.free(f"xwave{wave.index}")
+                    tel.waves_run += 1
+                    tel.batches_loaded += len(wave.batches)
+                    tel.bytes_streamed += nb
+                    _save(it * wpi + wave.index + 1)
+        finally:
+            meter.free("fixed_theta")
+
+    def _theta_half_mesh(it: int, first_wave: int, acc0=None):
+        # per-device resident: only the owned model shard's systems
+        acc_shard = n * (f * f + f + 1) * 4 // p
+        meter.alloc("acc", acc_shard)
+        if acc0 is not None:
+            A_dev = np.asarray(acc0[0], np.float64).copy()
+            B_dev = np.asarray(acc0[1], np.float64).copy()
+            c_dev = np.asarray(acc0[2], np.float64).copy()
+        else:
+            A_dev = np.zeros((n_data, n, f, f), np.float64)
+            B_dev = np.zeros((n_data, n, f), np.float64)
+            c_dev = np.zeros((n_data, n), np.float64)
+
+        def gen():
+            for wave in sched.waves[first_wave:]:
+                trips = [ratings.theta_batch_triplet(b.index)
+                         for b in wave.batches]
+                xs = [factors.read_slice("x", b.row_start, b.row_stop)
+                      for b in wave.batches]
+                yield wave, trips, xs
+
+        def put(item):
+            wave, trips, xs = item
+            nbatch = len(trips)
+            trip_nb = sum(triplet_nbytes(t) for t in trips)
+            x_nb = sum(x.nbytes for x in xs)
+            # per device: 1/p of one batch's R^T shard (its theta rows) +
+            # the batch's full X slice (replicated over the model axis)
+            meter.alloc(f"twave{wave.index}",
+                        trip_nb // (nbatch * p) + x_nb // nbatch)
+            pad = n_data - nbatch
+            idxT = np.stack([t[0] for t in trips])
+            valT = np.stack([t[1] for t in trips])
+            cntT = np.stack([t[2] for t in trips])
+            x_stack = np.stack(xs)
+            if pad:      # ragged last wave: empty batches contribute A = 0
+                z = ((0, pad),) + ((0, 0),) * 2
+                idxT, valT = np.pad(idxT, z), np.pad(valT, z)
+                cntT = np.pad(cntT, ((0, pad), (0, 0)))
+                x_stack = np.pad(x_stack, z)
+            return wave, (x_stack, idxT, valT, cntT), trip_nb + x_nb
+
+        try:
+            with Prefetcher(gen(), depth=prefetch_depth, put=put) as pf:
+                for wave, (x_stack, idxT, valT, cntT), nb in pf:
+                    A_w, B_w = wave_herm(x_stack, idxT, valT, cntT)
+                    # per-DATA-SHARD accumulation (float64: host stand-in
+                    # for the device-resident partials; exact for f32
+                    # summands, so the final topology reduce is order-free)
+                    A_dev += A_w
+                    B_dev += B_w
+                    c_dev += cntT
+                    meter.free(f"twave{wave.index}")
+                    tel.waves_run += 1
+                    tel.batches_loaded += len(wave.batches)
+                    tel.bytes_streamed += nb
+                    last = wave.index == W - 1
+                    if last:
+                        _reduce_and_solve(A_dev, B_dev, c_dev)
+                    _save(it * wpi + W + wave.index + 1,
+                          acc=None if last else (A_dev, B_dev, c_dev))
+        finally:
+            meter.free("acc")
+
+    def _reduce_and_solve(A_dev, B_dev, c_dev):
+        """Combine per-data-shard partials (paper Fig. 5b schedule), then
+        each model shard solves and writes back its own theta rows."""
+        A = dreduce.topology_reduce(list(A_dev), topo)
+        B = dreduce.topology_reduce(list(B_dev), topo)
+        c = dreduce.topology_reduce(list(c_dev), topo)
+        shard_f32 = n * (f * f + f + 1) * 4 // p   # one device's partial
+        traffic = dreduce.reduce_traffic(shard_f32 * p, topo)
+        tel.reduce_fast_bytes += traffic["fast_link_bytes"]
+        tel.reduce_slow_bytes += traffic["slow_link_bytes"]
+        meter.alloc("theta_out", n * f * 4 // p)
+        npp = n // p
+        for k in range(p):
+            lo, hi = k * npp, (k + 1) * npp
+            th_k = solve_acc_fn(jnp.asarray(A[lo:hi], jnp.float32),
+                                jnp.asarray(B[lo:hi], jnp.float32),
+                                jnp.asarray(c[lo:hi], jnp.float32))
+            factors.write_shard("theta", k, p, np.asarray(th_k))
+        meter.free("theta_out")
+
+    x_half = _x_half_mesh if mesh is not None else _x_half
+    theta_half = _theta_half_mesh if mesh is not None else _theta_half
+
+    # ------------------------------------------------------------------
     history: List[dict] = []
     it0 = start_step // wpi
     for it in range(it0, cfg.iters):
         resume_here = it == it0
         r = start_step % wpi if resume_here else 0
         if r < W:
-            _x_half(it, first_wave=r)
+            x_half(it, first_wave=r)
         if r < wpi:
-            _theta_half(it, first_wave=max(0, r - W),
-                        acc0=acc_restored if resume_here else None)
+            theta_half(it, first_wave=max(0, r - W),
+                       acc0=acc_restored if resume_here else None)
         rec = {"iteration": it + 1, "waves_run": tel.waves_run,
                "peak_bytes": meter.peak_bytes}
         if train_eval is not None or test_eval is not None:

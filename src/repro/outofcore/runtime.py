@@ -47,6 +47,11 @@ class StreamTelemetry:
     bytes_streamed: int = 0      # host->device rating + factor-slice traffic
     resumed_from_step: int = 0
     wall_seconds: float = 0.0
+    # mesh streaming only: per-link traffic of the topology-aware reduction
+    # that combines the per-data-shard Hermitian partials (distributed.reduce)
+    reduce_fast_bytes: int = 0   # intra-fast-domain ring traffic
+    reduce_slow_bytes: int = 0   # inter-domain tree traffic
+    topology: str = ""           # DeviceTopology.describe() of the reduce
 
 
 class SimulatedFailure(RuntimeError):

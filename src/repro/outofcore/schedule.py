@@ -78,6 +78,7 @@ class IterationSchedule:
     n_data: int                 # simulated devices on the data axis
     waves: Tuple[Wave, ...]     # shared by both halves of an iteration
     capacity_bytes: int         # per-device budget the driver meters against
+    p: int = 1                  # theta model shards (mesh "model" axis size)
 
     @property
     def waves_per_iteration(self) -> int:
@@ -88,7 +89,7 @@ class IterationSchedule:
         w = self.waves[0]
         return (f"waves={len(self.waves)} x {len(w.batches)} batches "
                 f"({w.rows} rows/wave, m_pad={self.m_pad}, n={self.n}, "
-                f"capacity={self.capacity_bytes / GiB:.3f}GiB)")
+                f"p={self.p}, capacity={self.capacity_bytes / GiB:.3f}GiB)")
 
 
 def build_schedule(
@@ -114,10 +115,12 @@ def build_schedule(
     waves = tuple(Wave(index=w, batches=g) for w, g in enumerate(groups))
     assert len(waves) * n_data >= plan.q
     assert waves[0].row_start == 0 and waves[-1].row_stop == m_pad
+    assert plan.p == 1 or n % plan.p == 0, (n, plan.p)
     return IterationSchedule(
         plan=plan, m_pad=m_pad, n=n, n_data=n_data, waves=waves,
         capacity_bytes=(plan.bytes_per_device if capacity_bytes is None
-                        else capacity_bytes))
+                        else capacity_bytes),
+        p=plan.p)
 
 
 # ---------------------------------------------------------------------------
@@ -251,21 +254,29 @@ def required_capacity_bytes(store, sched: IterationSchedule, f: int,
     scratch (solve-X half) or the accumulators (accumulate-Theta half).
     The honest counterpart of the planner's eq. (8) estimate, computed from
     the store's *real* padding fills.  ``plan_for(fill=store.worst_fill,
-    buffers=prefetch_depth + 2, eps=<accumulator bytes>)`` should dominate
-    this.
+    buffers=prefetch_depth + 2, acc_bytes=streaming_acc_bytes(n, f))``
+    should dominate this.
+
+    On a ``p > 1`` schedule (mesh streaming) every theta-sized resident —
+    the fixed Theta, the Hermitian accumulators, the solved shard — divides
+    by p, and the solve-X wave payload is the device's single column block
+    of the p-partitioned slice; only the fresh X slice of the accumulate
+    half stays replicated across the model axis (every shard's partial
+    Hermitian reads the whole batch).
     """
-    n_data = sched.n_data
+    n_data, p = sched.n_data, sched.p
     wave_rows = sched.waves[0].rows
     bufs = prefetch_depth + 2
-    # solve-X half: resident Theta + wave triplets + Hermitian/solve scratch
-    theta_bytes = store.n * f * 4
-    K = store.r.K
+    # solve-X half: resident Theta shard + wave triplets + solve scratch
+    theta_bytes = store.n * f * 4 // p
+    K = store.r.K if p == 1 else store.r_model_parts.idx.shape[-1]
     x_payload = (wave_rows * (K * 8 + 4)) // n_data
     x_scratch = (wave_rows * (f * f + 2 * f) * 4) // n_data
     x_half = theta_bytes + bufs * x_payload + x_scratch
-    # accumulate-Theta half: resident A/B/c + per-batch shard + X slice
+    # accumulate-Theta half: resident A/B/c shard + per-batch R^T rows of
+    # the owned theta shard + the batch's (replicated) X slice
     q, n, K_loc = store.rt_parts.idx.shape
-    acc_bytes = n * (f * f + f + 1) * 4
-    t_payload = n * (K_loc * 8 + 4) + (sched.m_pad // q) * f * 4
-    t_half = acc_bytes + bufs * t_payload + n * f * 4
+    acc_bytes = n * (f * f + f + 1) * 4 // p
+    t_payload = n * (K_loc * 8 + 4) // p + (sched.m_pad // q) * f * 4
+    t_half = acc_bytes + bufs * t_payload + n * f * 4 // p
     return max(x_half, t_half)

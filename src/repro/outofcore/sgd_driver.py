@@ -25,12 +25,20 @@ instead of holding the grid resident.  Per epoch the driver:
 
 ``MemoryMeter`` models one simulated worker of the wave (payloads divide by
 the wave's tile count), mirroring the ALS driver's per-device accounting.
+
+With ``mesh`` set the wave's stacked tiles are placed sharded over the
+joint ``("data", "model")`` device axes — one tile (and therefore one user
+block + one item block of the factors) per real device, CuMF_SGD's workers
+made concrete.  Ragged waves pad the stack with empty tiles (cnt = 0, a
+no-op update) up to the device count; the padded outputs are discarded
+before writeback.
 """
 from __future__ import annotations
 
 import time
 from typing import List, Optional
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -57,6 +65,7 @@ def run_streaming_sgd(
     train_eval=None,                 # (idx, val, cnt) for per-epoch RMSE
     test_eval=None,
     fail_after_waves: Optional[int] = None,
+    mesh=None,
     callback=None,
 ) -> tuple[FactorStore, List[dict], StreamTelemetry]:
     """Run ``cfg.epochs`` streaming SGD epochs of ``sched`` over ``tiles``.
@@ -65,6 +74,10 @@ def run_streaming_sgd(
     protocol as ``run_streaming_als``.  With ``ckpt_dir`` set the run
     resumes from the latest committed wave; ``factors`` seeds a warm start
     (the hybrid path) and defaults to ``sgd_init`` at the grid's shape.
+    With ``mesh`` set (a ``(data, model)`` mesh) each wave's tile stack is
+    sharded one-tile-per-device over the joint axes before the single
+    ``sgd_tiles_update`` dispatch runs, so the factor blocks live
+    distributed across the real devices.
     """
     assert (tiles.g, tiles.mb, tiles.nb, tiles.K) == \
         (sched.g, sched.mb, sched.nb, sched.K), \
@@ -73,6 +86,32 @@ def run_streaming_sgd(
     assert f == sched.f, (f, sched.f)
     wpe = sched.waves_per_epoch
     fac_bytes = (mb + nb) * f * 4          # one worker's two factor blocks
+
+    tile_sh = None
+    n_dev = 0
+    if mesh is not None:
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        joint = tuple(a for a in ("data", "model", "pod")
+                      if a in mesh.axis_names)
+        assert "data" in joint and len(joint) >= 2, mesh.axis_names
+        n_dev = 1
+        for a in joint:
+            n_dev *= mesh.shape[a]
+        assert sched.n_workers <= n_dev, \
+            f"schedule wants {sched.n_workers} workers, mesh has {n_dev}"
+        tile_sh = NamedSharding(mesh, P(joint))   # stack dim: 1 tile/device
+
+    def _pad_tiles(stack: np.ndarray) -> np.ndarray:
+        """Pad the leading tile axis up to the device count with empty
+        tiles (zeros everywhere -> cnt = 0 -> the update is a no-op)."""
+        pad = n_dev - stack.shape[0]
+        if pad <= 0:
+            return stack
+        return np.pad(stack, ((0, pad),) + ((0, 0),) * (stack.ndim - 1))
+
+    def _place(stack: np.ndarray):
+        return (jax.device_put(_pad_tiles(stack), tile_sh)
+                if mesh is not None else jnp.asarray(stack))
 
     meter = MemoryMeter()
     tel = StreamTelemetry(capacity_bytes=sched.capacity_bytes)
@@ -114,11 +153,11 @@ def run_streaming_sgd(
         def put(item):
             wave, trips = item
             payload = sum(triplet_nbytes(t) for t in trips)
-            # one simulated worker holds ONE tile of the wave
+            # one (simulated or real) worker holds ONE tile of the wave
             meter.alloc(f"tilewave{wave.index}", payload // len(trips))
-            dev = (jnp.asarray(np.stack([t[0] for t in trips])),
-                   jnp.asarray(np.stack([t[1] for t in trips])),
-                   jnp.asarray(np.stack([t[2] for t in trips])))
+            dev = (_place(np.stack([t[0] for t in trips])),
+                   _place(np.stack([t[1] for t in trips])),
+                   _place(np.stack([t[2] for t in trips])))
             return wave, dev, payload
 
         with Prefetcher(gen(), depth=prefetch_depth, put=put) as pf:
@@ -137,9 +176,11 @@ def run_streaming_sgd(
                 meter.alloc(f"fac_out{wave.index}", fac_bytes)
                 # the wave's disjoint tiles stack into one dispatch — the
                 # same sgd_tiles_update the in-core scan epoch uses, which
-                # is what keeps streaming == in-core parity exact
+                # is what keeps streaming == in-core parity exact; on a
+                # mesh the stack is sharded one tile per device, so the
+                # padded no-op tiles ride along and are discarded below
                 x_new, t_new = sgd_tiles_update(
-                    jnp.asarray(x_host), jnp.asarray(th_host), idx_d,
+                    _place(x_host), _place(th_host), idx_d,
                     val_d, cnt_d, lr_t, cfg.lam, mode=cfg.mode,
                     row_mult=cfg.row_mult, col_mult=cfg.col_mult,
                     f_mult=cfg.f_mult)

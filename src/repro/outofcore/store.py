@@ -65,6 +65,23 @@ class FactorStore:
         assert stop - start == len(rows), (start, stop, len(rows))
         arr[start:stop] = np.asarray(rows, arr.dtype)
 
+    # -- model-shard IO (mesh streaming): shard k of p owns the contiguous
+    # row range [k*rows/p, (k+1)*rows/p) of a factor.  The ownership rule of
+    # the p-sharded theta: only the owning model shard ever writes its range
+    # (see repro.outofcore's module doc), so shard reads/writes never race.
+    def shard_bounds(self, side: str, k: int, p: int) -> tuple[int, int]:
+        rows = self.factor(side).shape[0]
+        assert rows % p == 0, f"{side} rows={rows} not divisible by p={p}"
+        assert 0 <= k < p, (k, p)
+        npp = rows // p
+        return k * npp, (k + 1) * npp
+
+    def read_shard(self, side: str, k: int, p: int) -> np.ndarray:
+        return self.read_slice(side, *self.shard_bounds(side, k, p))
+
+    def write_shard(self, side: str, k: int, p: int, rows) -> None:
+        self.write_slice(side, *self.shard_bounds(side, k, p), rows)
+
     @property
     def nbytes(self) -> int:
         return int(self.x.nbytes + self.theta.nbytes)
@@ -79,11 +96,12 @@ class RatingStore:
     solve to x_u = 0 without touching Theta.
     """
 
-    def __init__(self, r: PaddedELL, q: int, k_multiple: int = 8):
-        assert q >= 1
+    def __init__(self, r: PaddedELL, q: int, k_multiple: int = 8, p: int = 1):
+        assert q >= 1 and p >= 1
         self.m = r.m                       # true (unpadded) user count
         self.n = r.n_cols                  # item count
         self.q = q
+        self.p = p
         self.m_pad = -(-r.m // q) * q
         self.r = pad_rows(r, self.m_pad)   # rows = users, global item idx
         # R^T with n_cols = m_pad, column-partitioned into the q user-batches:
@@ -95,6 +113,13 @@ class RatingStore:
         rt = pad_csr_fast(ptr, cc, vv, n_cols=self.m_pad,
                           k_multiple=k_multiple)
         self.rt_parts = partition_padded(rt, q, k_multiple=k_multiple)
+        # p > 1 (mesh streaming): R also column-partitioned into the p theta
+        # shards (shard-local item coordinates) so solve-X waves can be cut
+        # straight into the shard_map layout — the real eq. 5-7 p axis.
+        assert self.n % p == 0, f"n={self.n} not divisible by p={p}"
+        self.r_model_parts = (partition_padded(self.r, p,
+                                               k_multiple=k_multiple)
+                              if p > 1 else None)
 
     @property
     def nnz(self) -> int:
@@ -115,18 +140,54 @@ class RatingStore:
         return float(q * n * K_loc) / max(self.nnz, 1)
 
     @property
+    def fill_r_model(self) -> float:
+        """Padding overhead of the p column-partitioned R (mesh solve-X
+        waves): every user row pads to its max in-shard degree."""
+        if self.r_model_parts is None:
+            return self.fill_r
+        p, m, K_loc = self.r_model_parts.idx.shape
+        return float(p * m * K_loc) / max(self.nnz, 1)
+
+    @property
     def worst_fill(self) -> float:
-        return max(self.fill_r, self.fill_rt)
+        return max(self.fill_r, self.fill_rt, self.fill_r_model)
 
     @property
     def host_nbytes(self) -> int:
-        return int(self.r.idx.nbytes + self.r.val.nbytes + self.r.cnt.nbytes
-                   + self.rt_parts.idx.nbytes + self.rt_parts.val.nbytes
-                   + self.rt_parts.cnt.nbytes)
+        total = int(self.r.idx.nbytes + self.r.val.nbytes + self.r.cnt.nbytes
+                    + self.rt_parts.idx.nbytes + self.rt_parts.val.nbytes
+                    + self.rt_parts.cnt.nbytes)
+        if self.r_model_parts is not None:
+            total += int(self.r_model_parts.idx.nbytes
+                         + self.r_model_parts.val.nbytes
+                         + self.r_model_parts.cnt.nbytes)
+        return total
 
     def x_slice_triplet(self, row_start: int, row_stop: int) -> Triplet:
         """R rows for one solve-X wave slice (global item indices)."""
         return _triplet(row_slice(self.r, row_start, row_stop))
+
+    def x_slice_mesh_triplet(self, row_start: int, row_stop: int) -> Triplet:
+        """R rows for one solve-X wave slice in the ``shard_ratings`` mesh
+        layout: idx/val ``[rows, p*K_loc]`` (shard-local item coordinates,
+        the p column blocks laid out contiguously) and cnt ``[rows, p]``.
+        Requires the store to have been built with ``p > 1``."""
+        assert self.r_model_parts is not None, \
+            "RatingStore was built with p=1; pass p to stream on a mesh"
+        parts = self.r_model_parts
+        p, _, K_loc = parts.idx.shape
+        rows = row_stop - row_start
+        idx = np.ascontiguousarray(
+            np.transpose(parts.idx[:, row_start:row_stop], (1, 0, 2))
+        ).reshape(rows, p * K_loc)
+        val = np.ascontiguousarray(
+            np.transpose(parts.val[:, row_start:row_stop], (1, 0, 2))
+        ).reshape(rows, p * K_loc)
+        cnt = np.ascontiguousarray(
+            np.transpose(parts.cnt[:, row_start:row_stop], (1, 0)))
+        return (idx.astype(np.int32, copy=False),
+                val.astype(np.float32, copy=False),
+                cnt.astype(np.int32, copy=False))
 
     def theta_batch_triplet(self, j: int) -> Triplet:
         """R^T shard of user-batch ``j`` (batch-local user indices).

@@ -102,6 +102,8 @@ def run_streaming_hybrid(
     ckpt_dir: Optional[str] = None,
     keep: int = 3,
     prefetch_depth: int = 2,
+    mesh=None,
+    topology=None,
     callback=None,
 ):
     """Out-of-core hybrid: streaming ALS warm start, streaming SGD refine.
@@ -148,7 +150,8 @@ def run_streaming_hybrid(
         fac, als_hist, als_tel = run_streaming_als(
             ratings, als_sched, als_cfg, ckpt_dir=als_ck, keep=keep,
             prefetch_depth=prefetch_depth, test_eval=test_eval,
-            train_eval=train_eval, callback=lambda it, rec:
+            train_eval=train_eval, mesh=mesh, topology=topology,
+            callback=lambda it, rec:
                 tagged("als")(None, rec))
         # re-block the streamed factors to the grid's padded shape: the ALS
         # store is [m_pad, f] / [n, f], the SGD store [g*mb, f] / [g*nb, f]
@@ -161,5 +164,5 @@ def run_streaming_hybrid(
     final, sgd_hist, sgd_tel = run_streaming_sgd(
         tiles, sgd_sched, sgd_cfg, factors=warm, ckpt_dir=sgd_ck, keep=keep,
         prefetch_depth=prefetch_depth, test_eval=test_eval,
-        train_eval=train_eval, callback=tagged("sgd"))
+        train_eval=train_eval, mesh=mesh, callback=tagged("sgd"))
     return final, als_hist + sgd_hist, (als_tel, sgd_tel)
