@@ -1,0 +1,32 @@
+"""reprolint — repo-native static analysis for the invariants PRs 1-5
+learned the hard way.
+
+The compiler never checks the contracts this codebase's performance and
+bit-exactness story rests on: kernels must fit a declared per-device VMEM
+budget (paper eq. 5-8), Hermitian partials must stay float64 for the
+topology-aware reduction to be bit-exact, shard_map call sites must agree
+with the mesh builders' axis vocabulary, version-sensitive JAX surfaces
+must route through ``repro.compat``, and checkpoint commit paths must
+receive materialized copies, not live device arrays.  Each of those was
+re-discovered at runtime in an earlier PR; this package encodes them once
+as AST rules so they are checked on every PR instead of re-debugged.
+
+Usage::
+
+    PYTHONPATH=src python -m repro.analysis                # human output
+    PYTHONPATH=src python -m repro.analysis --json out.json
+    PYTHONPATH=src python -m repro.analysis --rule compat-routing
+    PYTHONPATH=src python -m repro.analysis --write-baseline
+
+See ANALYSIS.md at the repo root for the rule catalog, the suppression
+syntax (``# reprolint: disable=<rule>``) and the baseline workflow.
+"""
+from repro.analysis.engine import (AnalysisConfig, Baseline, Finding,
+                                   ParsedModule, Rule, iter_python_files,
+                                   run_analysis)
+from repro.analysis.rules import ALL_RULES, get_rules, rule_names
+
+__all__ = [
+    "ALL_RULES", "AnalysisConfig", "Baseline", "Finding", "ParsedModule",
+    "Rule", "get_rules", "iter_python_files", "rule_names", "run_analysis",
+]

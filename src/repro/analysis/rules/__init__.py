@@ -1,0 +1,47 @@
+"""Rule registry.
+
+``ALL_RULES`` is the ordered list of rule *instances* the CLI and tests
+run; ``get_rules(names)`` resolves a ``--rule`` selection and fails loudly
+on unknown names (the same contract as ``benchmarks/run.py --only``:
+typos must not silently match nothing).
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+from repro.analysis.engine import Rule
+from repro.analysis.rules.checkpoint_aliasing import CheckpointAliasingRule
+from repro.analysis.rules.compat_routing import CompatRoutingRule
+from repro.analysis.rules.pallas_budget import PallasBudgetRule
+from repro.analysis.rules.precision_drift import PrecisionDriftRule
+from repro.analysis.rules.shard_safety import ShardSafetyRule
+
+ALL_RULES: tuple[Rule, ...] = (
+    CompatRoutingRule(),
+    PallasBudgetRule(),
+    PrecisionDriftRule(),
+    ShardSafetyRule(),
+    CheckpointAliasingRule(),
+)
+
+
+def rule_names() -> list[str]:
+    return [r.name for r in ALL_RULES]
+
+
+def get_rules(names: Optional[Sequence[str]] = None) -> list[Rule]:
+    """Resolve a ``--rule`` selection; unknown names raise ValueError with
+    the full catalog (mirrors benchmarks/run.py's ``--only`` validation)."""
+    if not names:
+        return list(ALL_RULES)
+    known = {r.name: r for r in ALL_RULES}
+    unknown = [n for n in names if n not in known]
+    if unknown:
+        raise ValueError(
+            f"unknown rule name(s) {unknown}; choose from {sorted(known)}")
+    return [known[n] for n in names]
+
+
+__all__ = ["ALL_RULES", "CheckpointAliasingRule", "CompatRoutingRule",
+           "PallasBudgetRule", "PrecisionDriftRule", "ShardSafetyRule",
+           "get_rules", "rule_names"]

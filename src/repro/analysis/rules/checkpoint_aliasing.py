@@ -1,0 +1,211 @@
+"""checkpoint-aliasing: commit materialized copies, not live arrays.
+
+The PR 2 / PR 5 bug class: ``CheckpointManager.save`` commits on a
+background thread, so anything reachable from the committed tree that a
+later wave mutates in place (a live numpy accumulator, a ``row_slice``
+view, a donated device buffer) races the writer and corrupts the
+checkpoint silently — resume then diverges in ways only the bit-exactness
+tests catch, sometimes.  The repo's contract is that every value passed
+to a commit path is a *materialized host copy*.
+
+The rule tracks, per function, variables bound to
+``CheckpointManager(...)`` / ``WaveCheckpointer(...)`` and inspects every
+``<mgr>.save(step, tree)`` call site:
+
+- dict literals are checked value by value;
+- a ``Name`` argument is resolved one level through local assignments;
+- a function/lambda passed as the tree thunk (the ``WaveCheckpointer``
+  protocol) is analyzed through its returned dict *and* any
+  ``tree[key] = ...`` mutations on the returned variable;
+- **OK**: ``x.copy()``, ``np.array(...)`` (always copies), fresh
+  allocations (``np.zeros/ones/full/empty/stack/concatenate``), scalar
+  wrappers, constants, and containers thereof;
+- **flagged**: ``np.asarray(...)`` (returns the input itself when dtype
+  already matches — the exact PR 5 mesh-accumulator race),
+  ``jnp.asarray(...)`` and other ``jnp.*`` results (live device arrays),
+  bare attribute reads (``state.x``), and subscripts/slices (numpy
+  views);
+- anything unresolvable is left alone — the rule prefers silence to
+  noise.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Optional
+
+from repro.analysis.engine import Finding, ParsedModule, Rule, dotted_name
+
+MANAGER_TYPES = {"CheckpointManager", "WaveCheckpointer"}
+
+#: allocation calls that always return fresh arrays
+FRESH_CALLS = {"array", "zeros", "ones", "full", "empty", "eye", "stack",
+               "concatenate", "copy", "deepcopy", "float", "int", "bool",
+               "str"}
+
+BAD_CALL_MSG = {
+    "asarray": ("np.asarray aliases its input when the dtype already "
+                "matches; use np.array (always copies) on a commit path"),
+    "ascontiguousarray": ("np.ascontiguousarray aliases already-contiguous "
+                          "input (the PR 2 bug); use np.array on a commit "
+                          "path"),
+    "atleast_1d": "may alias its input; use np.array on a commit path",
+}
+
+
+class CheckpointAliasingRule(Rule):
+    name = "checkpoint-aliasing"
+    description = ("values committed through CheckpointManager/"
+                   "WaveCheckpointer must be materialized copies, not live "
+                   "device arrays or numpy views")
+    roots = ("src",)
+    # the manager/checkpointer implementations themselves snapshot via
+    # jax.device_get / thunk indirection by design
+    exclude = ("src/repro/checkpoint/", "src/repro/outofcore/runtime.py")
+
+    # -- expression classification -------------------------------------
+    def _check_value(self, node: ast.expr, scope: ast.AST, flag,
+                     depth: int = 0) -> None:
+        """Flag ``node`` if it is provably a live/aliasing commit value."""
+        if depth > 4:
+            return
+        if isinstance(node, ast.Constant):
+            return
+        if isinstance(node, ast.Dict):
+            for v in node.values:
+                self._check_value(v, scope, flag, depth + 1)
+            return
+        if isinstance(node, (ast.Tuple, ast.List)):
+            for v in node.elts:
+                self._check_value(v, scope, flag, depth + 1)
+            return
+        if isinstance(node, ast.Call):
+            dotted = dotted_name(node.func) or ""
+            leaf = dotted.split(".")[-1]
+            base = dotted.split(".")[0] if "." in dotted else ""
+            if leaf in BAD_CALL_MSG:
+                flag(node, BAD_CALL_MSG[leaf])
+                return
+            if base == "jnp" or dotted.startswith("jax.numpy"):
+                flag(node, f"'{dotted}' produces a live device array; "
+                           "commit a host copy (np.array) instead")
+                return
+            if leaf in FRESH_CALLS:
+                return                      # fresh allocation / real copy
+            return                          # unknown call: stay silent
+        if isinstance(node, ast.Name):
+            resolved = self._resolve_local(node.id, scope)
+            if resolved is not None:
+                self._check_value(resolved, scope, flag, depth + 1)
+            return
+        if isinstance(node, ast.Attribute):
+            flag(node, f"live array reference "
+                       f"'{dotted_name(node) or node.attr}' committed; the "
+                       "async writer races later in-place updates — pass a "
+                       "materialized copy (.copy() / np.array)")
+            return
+        if isinstance(node, ast.Subscript):
+            flag(node, "subscript/slice committed; numpy slices are views "
+                       "of the live array — pass a materialized copy")
+            return
+
+    @staticmethod
+    def _resolve_local(name: str, scope: ast.AST) -> Optional[ast.expr]:
+        """Last single-target assignment to ``name`` in ``scope``."""
+        found = None
+        for n in ast.walk(scope):
+            if isinstance(n, ast.Assign) and len(n.targets) == 1:
+                t = n.targets[0]
+                if isinstance(t, ast.Name) and t.id == name:
+                    found = n.value
+        return found
+
+    def _check_tree_fn(self, fn: ast.AST, flag) -> None:
+        """Analyze a tree thunk: returned dicts + tree[key] mutations."""
+        if isinstance(fn, ast.Lambda):
+            self._check_value(fn.body, fn, flag)
+            return
+        ret_names = set()
+        for n in ast.walk(fn):
+            if isinstance(n, ast.Return) and n.value is not None:
+                if isinstance(n.value, ast.Name):
+                    ret_names.add(n.value.id)
+                else:
+                    self._check_value(n.value, fn, flag)
+        # `tree[...] = value` mutations on the returned dict variable
+        for n in ast.walk(fn):
+            if isinstance(n, ast.Assign):
+                for t in n.targets:
+                    targets = [t]
+                    if isinstance(t, ast.Tuple):
+                        targets = list(t.elts)
+                    for tt in targets:
+                        if (isinstance(tt, ast.Subscript)
+                                and isinstance(tt.value, ast.Name)
+                                and tt.value.id in ret_names):
+                            vals = [n.value]
+                            if (isinstance(t, ast.Tuple)
+                                    and isinstance(n.value, ast.Tuple)
+                                    and len(t.elts) == len(n.value.elts)):
+                                vals = [n.value.elts[t.elts.index(tt)]]
+                            for v in vals:
+                                self._check_value(v, fn, flag)
+
+    # -- module walk ----------------------------------------------------
+    def check_module(self, mod: ParsedModule) -> list[Finding]:
+        out: list[Finding] = []
+
+        def flag(node: ast.AST, msg: str) -> None:
+            out.append(mod.finding(self.name, node, msg))
+
+        def visit_scope(scope: ast.AST, managers: set[str]) -> None:
+            local_mgrs = set(managers)
+            for n in ast.walk(scope):
+                if isinstance(n, ast.Assign) and len(n.targets) == 1:
+                    t, v = n.targets[0], n.value
+                    if isinstance(v, ast.IfExp):      # mgr = X if c else None
+                        v = v.body
+                    if (isinstance(t, ast.Name) and isinstance(v, ast.Call)
+                            and (dotted_name(v.func) or "").split(".")[-1]
+                            in MANAGER_TYPES):
+                        local_mgrs.add(t.id)
+            for n in ast.walk(scope):
+                if not isinstance(n, ast.Call):
+                    continue
+                f = n.func
+                if not (isinstance(f, ast.Attribute) and f.attr == "save"):
+                    continue
+                if not (isinstance(f.value, ast.Name)
+                        and f.value.id in local_mgrs):
+                    continue
+                if len(n.args) < 2:
+                    continue
+                tree = n.args[1]
+                if isinstance(tree, ast.Name):
+                    fn = self._resolve_fn(tree.id, scope)
+                    if fn is not None:
+                        self._check_tree_fn(fn, flag)
+                        continue
+                    resolved = self._resolve_local(tree.id, scope)
+                    if resolved is not None:
+                        self._check_value(resolved, scope, flag)
+                    continue
+                if isinstance(tree, ast.Lambda):
+                    self._check_tree_fn(tree, flag)
+                    continue
+                self._check_value(tree, scope, flag)
+
+        visit_scope(mod.tree, set())
+        return out
+
+    @staticmethod
+    def _resolve_fn(name: str, scope: ast.AST) -> Optional[ast.AST]:
+        for n in ast.walk(scope):
+            if (isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))
+                    and n.name == name):
+                return n
+            if isinstance(n, ast.Assign) and len(n.targets) == 1:
+                t = n.targets[0]
+                if (isinstance(t, ast.Name) and t.id == name
+                        and isinstance(n.value, ast.Lambda)):
+                    return n.value
+        return None

@@ -1,0 +1,189 @@
+"""pallas-budget: every pallas_call fits its declared VMEM budget.
+
+The paper's eq. 5-8 memory model sizes every kernel's working set against
+a declared fast-memory capacity; ROADMAP items 1-2 (degree-binned layouts,
+approximate-computing variants) will churn exactly these tile shapes.
+This rule makes the contract static: each ``pl.pallas_call`` /
+``compat.pallas_call`` site must belong to a wrapper function with an
+entry in ``repro.kernels.budgets.BUDGETS``, its BlockSpec / out-spec /
+scratch shapes must resolve against the entry's declared ``dim_bounds``
+(symbolic dims with no declared bound are themselves findings — an
+undeclared dim is an unbounded dim), and the estimated footprint::
+
+    2 * (in blocks + out blocks) + scratch        (see budgets.py docstring)
+
+must stay under the entry's ``vmem_limit``.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Optional
+
+from repro.analysis.engine import (Finding, ParsedModule, Rule, dotted_name,
+                                   keyword_arg)
+
+DTYPE_BYTES = {
+    "float64": 8, "f64": 8, "int64": 8,
+    "float32": 4, "f32": 4, "int32": 4, "uint32": 4,
+    "bfloat16": 2, "float16": 2, "int16": 2,
+    "int8": 1, "uint8": 1, "bool_": 1,
+}
+DEFAULT_ITEMSIZE = 4      # streamed blocks in this repo are f32
+
+
+class _Unresolved(Exception):
+    def __init__(self, what: str):
+        super().__init__(what)
+        self.what = what
+
+
+def _eval_dim(node: ast.expr, bounds: dict) -> int:
+    """Evaluate a block-shape dim against the declared bounds."""
+    if isinstance(node, ast.Constant) and isinstance(node.value, int):
+        return node.value
+    if isinstance(node, ast.Name):
+        if node.id in bounds:
+            return int(bounds[node.id])
+        raise _Unresolved(node.id)
+    if isinstance(node, ast.BinOp):
+        lhs, rhs = _eval_dim(node.left, bounds), _eval_dim(node.right, bounds)
+        if isinstance(node.op, ast.Add):
+            return lhs + rhs
+        if isinstance(node.op, ast.Sub):
+            return lhs - rhs
+        if isinstance(node.op, ast.Mult):
+            return lhs * rhs
+        if isinstance(node.op, ast.FloorDiv):
+            return lhs // rhs
+        raise _Unresolved(ast.dump(node.op))
+    if isinstance(node, ast.UnaryOp) and isinstance(node.op, ast.USub):
+        return -_eval_dim(node.operand, bounds)
+    raise _Unresolved(ast.unparse(node) if hasattr(ast, "unparse")
+                      else repr(node))
+
+
+def _shape_elts(node: ast.expr) -> Optional[list[ast.expr]]:
+    if isinstance(node, (ast.Tuple, ast.List)):
+        return list(node.elts)
+    return None
+
+
+def _dtype_bytes(node: Optional[ast.expr]) -> int:
+    """Itemsize of a ``jnp.float32``-style dtype expression."""
+    if node is None:
+        return DEFAULT_ITEMSIZE
+    dotted = dotted_name(node)
+    if dotted:
+        leaf = dotted.split(".")[-1]
+        if leaf in DTYPE_BYTES:
+            return DTYPE_BYTES[leaf]
+    if isinstance(node, ast.Constant) and isinstance(node.value, str):
+        return DTYPE_BYTES.get(node.value, DEFAULT_ITEMSIZE)
+    return DEFAULT_ITEMSIZE
+
+
+def _spec_list(node: Optional[ast.expr]) -> list[ast.expr]:
+    """in_specs/out_specs value -> list of spec expressions."""
+    if node is None:
+        return []
+    if isinstance(node, (ast.Tuple, ast.List)):
+        return list(node.elts)
+    return [node]
+
+
+class PallasBudgetRule(Rule):
+    name = "pallas-budget"
+    description = ("pallas_call block/scratch shapes must resolve against "
+                   "declared tile bounds and fit the kernel's declared "
+                   "VMEM budget (repro/kernels/budgets.py)")
+    roots = ("src",)
+
+    def __init__(self, budgets=None, pipeline_factor: int = 2):
+        if budgets is None:
+            from repro.kernels.budgets import BUDGETS
+            budgets = BUDGETS
+        self.budgets = budgets
+        self.pipeline_factor = pipeline_factor
+
+    # -- per-site accounting -------------------------------------------
+    def _block_bytes(self, spec: ast.expr, bounds: dict,
+                     flag, what: str) -> int:
+        """Bytes of one BlockSpec/vmem block; 0 if shapeless or flagged."""
+        if not isinstance(spec, ast.Call):
+            return 0       # e.g. a Name forwarded from elsewhere: unknown
+        fn = (dotted_name(spec.func) or "").split(".")[-1]
+        if fn in ("BlockSpec",):
+            shape = _shape_elts(spec.args[0]) if spec.args else None
+            dtype = DEFAULT_ITEMSIZE
+        elif fn in ("vmem", "VMEM", "MemoryRef"):
+            shape = _shape_elts(spec.args[0]) if spec.args else None
+            dtype = _dtype_bytes(spec.args[1] if len(spec.args) > 1 else None)
+        else:
+            return 0
+        if shape is None:
+            flag(spec, f"{what}: block shape is not a literal tuple; "
+                       "the budget checker cannot size it")
+            return 0
+        n = 1
+        for elt in shape:
+            try:
+                n *= _eval_dim(elt, bounds)
+            except _Unresolved as e:
+                flag(elt, f"{what}: dim '{e.what}' has no declared bound in "
+                          "the kernel's budgets.py entry (an undeclared dim "
+                          "is an unbounded dim)")
+                return 0
+        return n * dtype
+
+    def check_module(self, mod: ParsedModule) -> list[Finding]:
+        out: list[Finding] = []
+
+        def flag(node: ast.AST, msg: str) -> None:
+            out.append(mod.finding(self.name, node, msg))
+
+        # map pallas_call sites to their enclosing function name
+        func_stack: list[str] = []
+
+        def visit(node: ast.AST) -> None:
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                func_stack.append(node.name)
+                for child in ast.iter_child_nodes(node):
+                    visit(child)
+                func_stack.pop()
+                return
+            if isinstance(node, ast.Call):
+                dotted = dotted_name(node.func) or ""
+                if dotted.split(".")[-1] == "pallas_call":
+                    self._check_site(node, func_stack, flag)
+            for child in ast.iter_child_nodes(node):
+                visit(child)
+
+        visit(mod.tree)
+        return out
+
+    def _check_site(self, call: ast.Call, func_stack: list[str],
+                    flag) -> None:
+        owner = func_stack[-1] if func_stack else "<module>"
+        # compat.py's pass-through is the shim, not a kernel
+        if owner == "pallas_call":
+            return
+        budget = self.budgets.get(owner)
+        if budget is None:
+            flag(call, f"pallas_call in '{owner}' has no declared budget; "
+                       "add an entry to repro/kernels/budgets.py (declare "
+                       "the tile bounds and a VMEM limit)")
+            return
+        bounds = budget.dim_bounds
+        in_b = sum(self._block_bytes(s, bounds, flag, f"{owner} in_specs")
+                   for s in _spec_list(keyword_arg(call, "in_specs")))
+        out_b = sum(self._block_bytes(s, bounds, flag, f"{owner} out_specs")
+                    for s in _spec_list(keyword_arg(call, "out_specs")))
+        scratch = sum(
+            self._block_bytes(s, bounds, flag, f"{owner} scratch_shapes")
+            for s in _spec_list(keyword_arg(call, "scratch_shapes")))
+        total = self.pipeline_factor * (in_b + out_b) + scratch
+        if total > budget.vmem_limit:
+            flag(call, f"'{owner}' estimated VMEM footprint {total} B "
+                       f"({self.pipeline_factor}*(in {in_b} + out {out_b}) "
+                       f"+ scratch {scratch}) exceeds its declared limit "
+                       f"{budget.vmem_limit} B under bounds {bounds}")

@@ -1,0 +1,203 @@
+"""shard-safety: shard_map specs agree with the mesh builders' axes.
+
+Two failure modes this catches statically:
+
+- **axis-name typos**: a ``P("modle")`` or ``lax.psum(y, "modell")`` only
+  fails at trace time, on a mesh, in whichever lane happens to exercise
+  that path.  The mesh builders in ``src/repro/launch/mesh.py`` are the
+  single source of the axis vocabulary ("data" / "model" / "pod"); every
+  string axis used in a PartitionSpec, a ``shard_map(axis_names=...)``
+  set, or a named collective must be declared there.
+- **spec arity drift**: ``shard_map(f, in_specs=..., out_specs=...)``
+  where the spec count disagrees with ``f``'s signature (or its returned
+  tuple) — the error XLA eventually raises is far from the edit that
+  caused it.  Checked whenever both sides are statically known (literal
+  spec tuples, in-file def or lambda).
+
+The vocabulary is parsed from the mesh-builder module's AST (string
+elements of tuple literals — the axes tuples), so adding an axis to the
+builders automatically widens the checker.
+"""
+from __future__ import annotations
+
+import ast
+import pathlib
+from typing import Optional
+
+from repro.analysis.engine import (Finding, ParsedModule, Rule, dotted_name,
+                                   keyword_arg)
+
+#: fallback vocabulary if the mesh-builder module cannot be parsed
+DEFAULT_AXES = frozenset({"data", "model", "pod"})
+
+#: repo-relative module the axis vocabulary is declared in
+MESH_BUILDER = "src/repro/launch/mesh.py"
+
+#: lax collectives whose string args name mesh axes
+COLLECTIVES = {"psum", "pmax", "pmin", "pmean", "psum_scatter",
+               "all_gather", "all_to_all", "axis_index", "ppermute"}
+
+SPEC_FUNCS = {"P", "PartitionSpec"}
+
+
+def axes_from_mesh_builder(path: pathlib.Path) -> frozenset[str]:
+    """Axis names declared by the mesh builders: every string element of a
+    tuple literal in the module (the ``axes`` tuples; shape tuples are
+    ints and contribute nothing)."""
+    try:
+        tree = ast.parse(path.read_text())
+    except (OSError, SyntaxError):
+        return DEFAULT_AXES
+    axes = set()
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Tuple):
+            for elt in node.elts:
+                if isinstance(elt, ast.Constant) and isinstance(elt.value, str):
+                    axes.add(elt.value)
+    return frozenset(axes) or DEFAULT_AXES
+
+
+def _resolve_mapped_fn(name: str, stack: list[ast.AST]) -> Optional[ast.AST]:
+    """Find ``def name`` / ``name = lambda`` in the enclosing scopes."""
+    for scope in reversed(stack):
+        for child in ast.walk(scope):
+            if (isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef))
+                    and child.name == name):
+                return child
+            if isinstance(child, ast.Assign):
+                for t in child.targets:
+                    if (isinstance(t, ast.Name) and t.id == name
+                            and isinstance(child.value, ast.Lambda)):
+                        return child.value
+    return None
+
+
+def _positional_arity(fn: ast.AST) -> Optional[int]:
+    args = fn.args
+    if args.vararg is not None:
+        return None                      # *args: arity unknowable
+    return len(args.posonlyargs) + len(args.args)
+
+
+def _return_arities(fn: ast.AST) -> set[int]:
+    """Sizes of literal tuple returns; non-literal returns add nothing."""
+    if isinstance(fn, ast.Lambda):
+        body = fn.body
+        return {len(body.elts)} if isinstance(body, ast.Tuple) else set()
+    out = set()
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Return) and isinstance(node.value, ast.Tuple):
+            out.add(len(node.value.elts))
+    return out
+
+
+class ShardSafetyRule(Rule):
+    name = "shard-safety"
+    description = ("shard_map axis names must come from the mesh builders' "
+                   "declared vocabulary and in_specs/out_specs arity must "
+                   "match the mapped function")
+    roots = ("src",)
+
+    def __init__(self, axes: Optional[frozenset[str]] = None,
+                 mesh_builder: str = MESH_BUILDER):
+        self._axes = axes
+        self.mesh_builder = mesh_builder
+
+    def axes(self, repo_root: pathlib.Path) -> frozenset[str]:
+        if self._axes is not None:
+            return self._axes
+        return axes_from_mesh_builder(repo_root / self.mesh_builder)
+
+    def check_module(self, mod: ParsedModule) -> list[Finding]:
+        out: list[Finding] = []
+        # repo root = the path minus the rel suffix
+        root = pathlib.Path(
+            str(mod.path.resolve())[: -len(mod.rel) - 1] or "/")
+        vocab = self.axes(root)
+
+        def flag(node: ast.AST, msg: str) -> None:
+            out.append(mod.finding(self.name, node, msg))
+
+        def check_axis_strings(node: ast.AST, what: str) -> None:
+            for n in ast.walk(node):
+                if (isinstance(n, ast.Constant) and isinstance(n.value, str)
+                        and n.value not in vocab):
+                    flag(n, f"{what} names axis '{n.value}', which no mesh "
+                            f"builder declares (known: {sorted(vocab)})")
+
+        def check_specs(node: ast.AST, what: str) -> None:
+            """Validate axis strings inside P(...)/PartitionSpec(...)."""
+            for n in ast.walk(node):
+                if isinstance(n, ast.Call):
+                    leaf = (dotted_name(n.func) or "").split(".")[-1]
+                    if leaf in SPEC_FUNCS:
+                        for arg in list(n.args) + [k.value for k in n.keywords]:
+                            check_axis_strings(arg, what)
+
+        stack: list[ast.AST] = [mod.tree]
+
+        def visit(node: ast.AST) -> None:
+            is_scope = isinstance(
+                node, (ast.FunctionDef, ast.AsyncFunctionDef))
+            if is_scope:
+                stack.append(node)
+            if isinstance(node, ast.Call):
+                leaf = (dotted_name(node.func) or "").split(".")[-1]
+                if leaf == "shard_map":
+                    self._check_shard_map(node, stack, vocab, flag,
+                                          check_specs, check_axis_strings)
+                elif leaf in COLLECTIVES and node.args:
+                    # axis argument: arg 1 for collectives, arg 0 for
+                    # axis_index
+                    i = 0 if leaf == "axis_index" else 1
+                    if len(node.args) > i:
+                        check_axis_strings(node.args[i],
+                                           f"lax.{leaf} axis argument")
+            for child in ast.iter_child_nodes(node):
+                visit(child)
+            if is_scope:
+                stack.pop()
+
+        visit(mod.tree)
+        return out
+
+    def _check_shard_map(self, call: ast.Call, stack: list[ast.AST],
+                         vocab, flag, check_specs, check_axis_strings) -> None:
+        in_specs = keyword_arg(call, "in_specs")
+        out_specs = keyword_arg(call, "out_specs")
+        axis_names = keyword_arg(call, "axis_names")
+        if in_specs is not None:
+            check_specs(in_specs, "shard_map in_specs")
+        if out_specs is not None:
+            check_specs(out_specs, "shard_map out_specs")
+        if axis_names is not None and isinstance(axis_names, (ast.Set,
+                                                              ast.Tuple,
+                                                              ast.List)):
+            for elt in axis_names.elts:
+                if isinstance(elt, ast.Constant) and isinstance(elt.value, str):
+                    check_axis_strings(elt, "shard_map axis_names")
+
+        # arity: only when the mapped fn and the spec tuple are both known
+        if not call.args:
+            return
+        target = call.args[0]
+        fn: Optional[ast.AST] = None
+        if isinstance(target, ast.Lambda):
+            fn = target
+        elif isinstance(target, ast.Name):
+            fn = _resolve_mapped_fn(target.id, stack)
+        if fn is None:
+            return
+        arity = _positional_arity(fn)
+        if (arity is not None and isinstance(in_specs, (ast.Tuple, ast.List))
+                and len(in_specs.elts) != arity):
+            flag(call, f"shard_map in_specs has {len(in_specs.elts)} "
+                       f"entries but the mapped function takes {arity} "
+                       "positional arguments")
+        if isinstance(out_specs, (ast.Tuple, ast.List)):
+            rets = _return_arities(fn)
+            if rets and len(out_specs.elts) not in rets:
+                flag(call, f"shard_map out_specs has "
+                           f"{len(out_specs.elts)} entries but the mapped "
+                           f"function returns tuple(s) of size "
+                           f"{sorted(rets)}")

@@ -121,7 +121,7 @@ def solve_accumulated(A, B, cnt_total, cfg: AlsConfig) -> jax.Array:
     """
     f = A.shape[-1]
     empty = (cnt_total <= 0).astype(A.dtype)
-    A = A + empty[:, None, None] * jnp.eye(f, dtype=A.dtype)
+    A = A + empty[:, None, None] * jnp.eye(f, dtype=A.dtype)[None, :, :]
     solve = functools.partial(kops.batch_solve, mode=cfg.mode, tb=cfg.tb)
     m = A.shape[0]
     if cfg.batch_rows and cfg.batch_rows < m:

@@ -168,5 +168,5 @@ def herm_hbm_accum(
         da, db = onebin(g[:, k0:k0 + tk], val[:, k0:k0 + tk], mask[:, k0:k0 + tk])
         acc_a = acc_a + da          # HBM round trip per bin (the ablated cost)
         acc_b = acc_b + db
-    eye = jnp.eye(F, dtype=jnp.float32)
+    eye = jnp.eye(F, dtype=jnp.float32)[None, :, :]
     return acc_a + diag[:, None, None] * eye, acc_b

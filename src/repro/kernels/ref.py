@@ -30,7 +30,7 @@ def herm_ref(
     F = g.shape[-1]
     gm = g * mask[..., None]
     A = jnp.einsum("ukf,ukg->ufg", gm, g, preferred_element_type=jnp.float32)
-    A = A + diag[:, None, None] * jnp.eye(F, dtype=A.dtype)
+    A = A + diag[:, None, None] * jnp.eye(F, dtype=A.dtype)[None, :, :]
     B = jnp.einsum("uk,ukf->uf", val * mask, g, preferred_element_type=jnp.float32)
     return A, B
 

@@ -26,7 +26,9 @@ NEG_INF = -1e30
 def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
     var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
     out = x.astype(jnp.float32) * lax.rsqrt(var + eps)
-    return (out * (1.0 + scale.astype(jnp.float32))).astype(x.dtype)
+    w = (1.0 + scale.astype(jnp.float32)).reshape(
+        (1,) * (out.ndim - 1) + (-1,))
+    return (out * w).astype(x.dtype)
 
 
 def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
@@ -34,6 +36,7 @@ def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
     dh = x.shape[-1]
     half = dh // 2
     freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    freq = freq.reshape((1,) * positions.ndim + (-1,))
     angles = positions[..., None].astype(jnp.float32) * freq      # [..., S, half]
     sin = jnp.sin(angles)[..., None, :]                           # [..., S, 1, half]
     cos = jnp.cos(angles)[..., None, :]
@@ -47,6 +50,7 @@ def sinusoidal_positions(positions: jax.Array, d: int) -> jax.Array:
     """Classic transformer sinusoidal embeddings (musicgen backbone)."""
     half = d // 2
     freq = 10000.0 ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    freq = freq.reshape((1,) * positions.ndim + (-1,))
     ang = positions[..., None].astype(jnp.float32) * freq
     return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
 
@@ -62,8 +66,10 @@ def swiglu_mlp(x, w_gate, w_up, w_down):
 
 
 def gelu_mlp(x, w_in, b_in, w_out, b_out):
-    h = jnp.einsum("...d,df->...f", x, w_in) + b_in
-    return jnp.einsum("...f,fd->...d", jax.nn.gelu(h), w_out) + b_out
+    lead = (1,) * (x.ndim - 1)
+    h = jnp.einsum("...d,df->...f", x, w_in) + b_in.reshape(lead + (-1,))
+    return (jnp.einsum("...f,fd->...d", jax.nn.gelu(h), w_out)
+            + b_out.reshape(lead + (-1,)))
 
 
 def geglu_mlp(x, w_gate, w_up, w_down):

@@ -29,7 +29,8 @@ def _lru_coeffs(params, x):
     """x [B, S, R] -> (a, b) with h_t = a_t h_{t-1} + b_t."""
     r = jax.nn.sigmoid(jnp.einsum("bsr,rk->bsk", x, params["w_a"].astype(x.dtype)))
     i = jax.nn.sigmoid(jnp.einsum("bsr,rk->bsk", x, params["w_x"].astype(x.dtype)))
-    log_a = -C_SCALE * jax.nn.softplus(params["lam"].astype(jnp.float32)) * r.astype(jnp.float32)
+    lam = jax.nn.softplus(params["lam"].astype(jnp.float32))
+    log_a = -C_SCALE * lam.reshape((1,) * (r.ndim - 1) + (-1,)) * r.astype(jnp.float32)
     a = jnp.exp(log_a)
     b = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * (
         i.astype(jnp.float32) * x.astype(jnp.float32))
@@ -70,7 +71,7 @@ def causal_conv1d(x, kernel, state=None):
     else:
         pad = state.astype(x.dtype)
     xp = jnp.concatenate([pad, x], axis=1)                  # [B, S+W-1, R]
-    y = sum(xp[:, i:i + x.shape[1]] * kernel[i].astype(x.dtype)
+    y = sum(xp[:, i:i + x.shape[1]] * kernel[i].astype(x.dtype)[None, None]
             for i in range(W))
     return y, xp[:, -(W - 1):]
 

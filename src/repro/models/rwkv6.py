@@ -32,7 +32,8 @@ def _token_shift(x, prev=None):
 
 
 def _mix(x, xs, mu):
-    return x + (xs - x) * mu.astype(x.dtype)
+    return x + (xs - x) * mu.astype(x.dtype).reshape(
+        (1,) * (x.ndim - 1) + (-1,))
 
 
 def _decay(params, xw):
@@ -40,7 +41,8 @@ def _decay(params, xw):
     lora = jnp.einsum("bsd,dl->bsl", xw, params["w_lora_a"].astype(xw.dtype))
     lora = jnp.einsum("bsl,ld->bsd", jnp.tanh(lora), params["w_lora_b"].astype(xw.dtype))
     return jnp.exp(-jnp.exp(
-        params["w0"].astype(jnp.float32) + lora.astype(jnp.float32)))
+        params["w0"].astype(jnp.float32)[None, None]
+        + lora.astype(jnp.float32)))
 
 
 def _wkv_scan(r, k, v, w, u, s0=None, chunk: int = 64):
@@ -109,7 +111,8 @@ def time_mix(params, x, *, cache=None):
     mean = yf.mean(-1, keepdims=True)
     var = yf.var(-1, keepdims=True)
     yn = (yf - mean) * lax.rsqrt(var + 64e-5)
-    yn = yn.reshape(B, S, D) * params["ln_w"].astype(jnp.float32) + params["ln_b"].astype(jnp.float32)
+    yn = (yn.reshape(B, S, D) * params["ln_w"].astype(jnp.float32)[None, None]
+          + params["ln_b"].astype(jnp.float32)[None, None])
 
     out = jnp.einsum("bse,ed->bsd", (yn.astype(x.dtype) * g), params["w_o"].astype(x.dtype))
     new_cache = {"s": s_last, "x_prev": x[:, -1]}

@@ -286,9 +286,9 @@ def _attn_forward(cfg, p, x, positions, cache, *, mode, mesh, lengths,
     k = jnp.einsum("bsd,dke->bske", xn, p["wk"].astype(dt))
     v = jnp.einsum("bsd,dke->bske", xn, p["wv"].astype(dt))
     if cfg.qkv_bias:
-        q = q + p["bq"].astype(dt)
-        k = k + p["bk"].astype(dt)
-        v = v + p["bv"].astype(dt)
+        q = q + p["bq"].astype(dt)[None, None]
+        k = k + p["bk"].astype(dt)[None, None]
+        v = v + p["bv"].astype(dt)[None, None]
     if cfg.qk_norm:
         q = L.rms_norm(q, p["qnorm"], cfg.norm_eps)
         k = L.rms_norm(k, p["knorm"], cfg.norm_eps)

@@ -198,9 +198,13 @@ def run_streaming_als(
             # keep mutating the live factor arrays
             tree["x"], tree["theta"] = factors.x.copy(), factors.theta.copy()
             if acc is not None:
-                tree["a_acc"] = np.asarray(acc[0], tree["a_acc"].dtype)
-                tree["b_acc"] = np.asarray(acc[1], tree["b_acc"].dtype)
-                tree["c_acc"] = np.asarray(acc[2], tree["c_acc"].dtype)
+                # np.array, NOT np.asarray: on the mesh path the acc leaves
+                # are the live f64 per-shard accumulators and asarray would
+                # alias them (same dtype), racing the async commit against
+                # the next wave's in-place `A_dev += A_w`
+                tree["a_acc"] = np.array(acc[0], tree["a_acc"].dtype)
+                tree["b_acc"] = np.array(acc[1], tree["b_acc"].dtype)
+                tree["c_acc"] = np.array(acc[2], tree["c_acc"].dtype)
             return tree
         ckpt.save(step, tree_fn)
 

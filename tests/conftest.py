@@ -1,8 +1,47 @@
 # NOTE: no XLA_FLAGS here on purpose — smoke tests and benches must see the
 # real single CPU device.  Tests that need a multi-device mesh spawn a
 # subprocess with XLA_FLAGS set (see test_distributed.py).
+import os
+
 import numpy as np
 import pytest
+
+
+def pytest_addoption(parser):
+    parser.addoption(
+        "--sanitize", action="store_true", default=False,
+        help="run under JAX runtime sanitizers: rank_promotion='raise', "
+             "debug_nans, enable_checks (also enabled by REPRO_SANITIZE=1)")
+
+
+def _sanitize_enabled(config) -> bool:
+    return bool(config.getoption("--sanitize")
+                or os.environ.get("REPRO_SANITIZE"))
+
+
+def pytest_configure(config):
+    if not _sanitize_enabled(config):
+        return
+    # Opt-in sanitizer mode (CI's sanitizer lane; locally: pytest
+    # --sanitize or REPRO_SANITIZE=1).  Three classes of silent bug become
+    # loud failures:
+    #   rank_promotion="raise" — the implicit-broadcast bug class (a
+    #     [n] vector meeting a [n, 1] column silently outer-products);
+    #   debug_nans — NaNs surface at the op that made them, not as a
+    #     diverged RMSE forty waves later;
+    #   enable_checks — jax's internal invariant checks.
+    import jax
+
+    jax.config.update("jax_numpy_rank_promotion", "raise")
+    jax.config.update("jax_debug_nans", True)
+    jax.config.update("jax_enable_checks", True)
+
+
+def pytest_report_header(config):
+    if _sanitize_enabled(config):
+        return ("sanitize: ON (jax_numpy_rank_promotion=raise, "
+                "jax_debug_nans, jax_enable_checks)")
+    return None
 
 
 @pytest.fixture

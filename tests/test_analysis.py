@@ -1,0 +1,517 @@
+"""reprolint unit tests: one flagged + one clean snippet per rule, plus
+suppressions, baseline round-trip, and the CLI's --rule validation.
+
+Each snippet is a synthetic violation of exactly the invariant the rule
+guards (the CI lint job's fail-on-new behavior is demonstrated here: the
+flagged corpus produces new findings, the clean corpus produces none).
+The analyzer's verdict on the *real* repo is covered at the end — the
+tree must be clean at merge.
+"""
+import json
+import pathlib
+import textwrap
+
+import pytest
+
+from repro.analysis.engine import (AnalysisConfig, Baseline, Finding,
+                                   run_analysis)
+from repro.analysis.rules import ALL_RULES, get_rules, rule_names
+from repro.analysis.rules.checkpoint_aliasing import CheckpointAliasingRule
+from repro.analysis.rules.compat_routing import CompatRoutingRule
+from repro.analysis.rules.pallas_budget import PallasBudgetRule
+from repro.analysis.rules.precision_drift import PrecisionDriftRule
+from repro.analysis.rules.shard_safety import ShardSafetyRule
+from repro.analysis.__main__ import main as cli_main
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+
+AXES = frozenset({"data", "model", "pod"})
+
+
+def run_rule(tmp_path, rule, source, rel="src/mod.py"):
+    """Write ``source`` at ``tmp_path/rel`` and run one rule over it."""
+    path = tmp_path / rel
+    path.parent.mkdir(parents=True, exist_ok=True)
+    path.write_text(textwrap.dedent(source))
+    cfg = AnalysisConfig(root=tmp_path, rules=[rule], paths=[path])
+    new, _ = run_analysis(cfg)
+    return new
+
+
+# ---------------------------------------------------------------------------
+# compat-routing
+# ---------------------------------------------------------------------------
+
+class TestCompatRouting:
+    def test_flags_direct_shard_map_import(self, tmp_path):
+        found = run_rule(tmp_path, CompatRoutingRule(), """
+            from jax.experimental.shard_map import shard_map
+        """)
+        assert len(found) >= 1
+        assert all(f.rule == "compat-routing" for f in found)
+
+    def test_flags_banned_names_and_interpret(self, tmp_path):
+        found = run_rule(tmp_path, CompatRoutingRule(), """
+            import jax
+            from jax.experimental import pallas as pl
+
+            def bad(mesh):
+                params = jax.sharding.AxisType
+                return pl.pallas_call(lambda r: r, interpret=True)
+        """)
+        msgs = "\n".join(f.message for f in found)
+        assert "AxisType" in msgs
+        assert "pl.pallas_call" in msgs
+        assert "interpret=" in msgs
+
+    def test_flags_check_rep_vocabulary(self, tmp_path):
+        found = run_rule(tmp_path, CompatRoutingRule(), """
+            from repro import compat
+
+            def f(mesh, g):
+                return compat.shard_map(g, mesh=mesh, check_rep=False)
+        """)
+        assert any("check_rep" in f.message for f in found)
+
+    def test_clean_compat_spelling_passes(self, tmp_path):
+        found = run_rule(tmp_path, CompatRoutingRule(), """
+            from repro import compat
+
+            def good(mesh, g, x):
+                return compat.shard_map(g, mesh=mesh)(x)
+
+            def kernel(x):
+                return compat.pallas_call(lambda r, o: None)(x)
+        """)
+        assert found == []
+
+    def test_shim_itself_is_excluded(self, tmp_path):
+        found = run_rule(tmp_path, CompatRoutingRule(), """
+            from jax.experimental.shard_map import shard_map
+        """, rel="src/repro/compat.py")
+        assert found == []
+
+
+# ---------------------------------------------------------------------------
+# pallas-budget
+# ---------------------------------------------------------------------------
+
+def _budget_rule(limit, bounds):
+    from repro.kernels.budgets import KernelBudget
+    return PallasBudgetRule(
+        budgets={"my_kernel": KernelBudget(vmem_limit=limit,
+                                           dim_bounds=dict(bounds))})
+
+
+KERNEL_SRC = """
+    from repro import compat
+
+    def my_kernel(x, tm):
+        return compat.pallas_call(
+            lambda xr, orf: None,
+            in_specs=[compat.BlockSpec((tm, 128), lambda i: (i, 0))],
+            out_specs=compat.BlockSpec((8, 128), lambda i: (i, 0)),
+            scratch_shapes=[compat.vmem((8, 128), jnp.float32)],
+        )(x)
+"""
+
+
+class TestPallasBudget:
+    def test_flags_over_budget_footprint(self, tmp_path):
+        # 2*(8*128*4 + 8*128*4) + 8*128*4 = 20480 B > 100 B limit
+        found = run_rule(tmp_path, _budget_rule(100, {"tm": 8}), KERNEL_SRC)
+        assert len(found) == 1
+        assert "20480 B" in found[0].message
+        assert "exceeds" in found[0].message
+
+    def test_clean_within_budget(self, tmp_path):
+        found = run_rule(tmp_path, _budget_rule(1 << 20, {"tm": 8}),
+                         KERNEL_SRC)
+        assert found == []
+
+    def test_flags_missing_budget_entry(self, tmp_path):
+        found = run_rule(tmp_path, _budget_rule(1 << 20, {"tm": 8}), """
+            from repro import compat
+
+            def unregistered_kernel(x):
+                return compat.pallas_call(lambda r, o: None)(x)
+        """)
+        assert len(found) == 1
+        assert "no declared budget" in found[0].message
+
+    def test_flags_undeclared_symbolic_dim(self, tmp_path):
+        # tm has no bound in the entry -> unbounded dim is a finding
+        found = run_rule(tmp_path, _budget_rule(1 << 20, {}), KERNEL_SRC)
+        assert any("no declared bound" in f.message for f in found)
+
+    def test_real_kernels_fit_their_declared_budgets(self):
+        cfg = AnalysisConfig(root=REPO, rules=[PallasBudgetRule()])
+        new, _ = run_analysis(cfg)
+        assert new == [], "\n".join(f.format() for f in new)
+
+
+# ---------------------------------------------------------------------------
+# precision-drift
+# ---------------------------------------------------------------------------
+
+class TestPrecisionDrift:
+    def test_flags_narrow_accumulator(self, tmp_path):
+        found = run_rule(tmp_path, PrecisionDriftRule(), """
+            import numpy as np
+            from repro.distributed.reduce import topology_reduce
+
+            def wave(parts, plan):
+                acc = np.zeros((4, 4), dtype=np.float32)
+                return topology_reduce(acc, plan)
+        """)
+        assert len(found) == 1
+        assert "float64" in found[0].message
+
+    def test_flags_through_one_call_level(self, tmp_path):
+        # the driver._reduce_and_solve shape: caller allocates, callee
+        # reduces
+        found = run_rule(tmp_path, PrecisionDriftRule(), """
+            import numpy as np
+            from repro.distributed.reduce import topology_reduce
+
+            def _reduce_and_solve(A_dev, plan):
+                return topology_reduce(A_dev, plan)
+
+            def driver(plan):
+                A_dev = np.zeros((4,), dtype=np.float32)
+                return _reduce_and_solve(A_dev, plan)
+        """)
+        assert len(found) == 1
+
+    def test_flags_astype_narrowing(self, tmp_path):
+        found = run_rule(tmp_path, PrecisionDriftRule(), """
+            import numpy as np
+            from repro.distributed.reduce import topology_reduce
+
+            def wave(acc, plan):
+                acc.astype(np.float32)
+                return topology_reduce(acc, plan)
+        """)
+        assert len(found) == 1
+        assert "astype" in found[0].message
+
+    def test_clean_f64_accumulator_and_downstream_cast(self, tmp_path):
+        # casting the *result* after the reduce is deliberately fine
+        found = run_rule(tmp_path, PrecisionDriftRule(), """
+            import numpy as np
+            from repro.distributed.reduce import topology_reduce
+
+            def wave(parts, plan):
+                acc = np.zeros((4, 4), dtype=np.float64)
+                acc += parts[0]
+                total = topology_reduce(acc, plan)
+                return total.astype(np.float32)
+        """)
+        assert found == []
+
+
+# ---------------------------------------------------------------------------
+# shard-safety
+# ---------------------------------------------------------------------------
+
+class TestShardSafety:
+    def test_flags_unknown_axis_in_specs(self, tmp_path):
+        found = run_rule(tmp_path, ShardSafetyRule(axes=AXES), """
+            from repro import compat
+            from jax.sharding import PartitionSpec as P
+
+            def f(mesh, x):
+                def inner(a):
+                    return a
+                return compat.shard_map(
+                    inner, mesh=mesh,
+                    in_specs=(P("modle"),), out_specs=P("data"))(x)
+        """)
+        assert len(found) == 1
+        assert "'modle'" in found[0].message
+
+    def test_flags_unknown_collective_axis(self, tmp_path):
+        found = run_rule(tmp_path, ShardSafetyRule(axes=AXES), """
+            from jax import lax
+
+            def inner(a):
+                return lax.psum(a, "podd")
+        """)
+        assert len(found) == 1
+        assert "'podd'" in found[0].message
+
+    def test_flags_in_specs_arity_mismatch(self, tmp_path):
+        found = run_rule(tmp_path, ShardSafetyRule(axes=AXES), """
+            from repro import compat
+            from jax.sharding import PartitionSpec as P
+
+            def f(mesh, x, y):
+                def inner(a, b):
+                    return a + b
+                return compat.shard_map(
+                    inner, mesh=mesh,
+                    in_specs=(P("data"), P("data"), P("data")),
+                    out_specs=P("data"))(x, y)
+        """)
+        assert len(found) == 1
+        assert "3 entries" in found[0].message
+        assert "takes 2" in found[0].message
+
+    def test_flags_out_specs_arity_mismatch(self, tmp_path):
+        found = run_rule(tmp_path, ShardSafetyRule(axes=AXES), """
+            from repro import compat
+            from jax.sharding import PartitionSpec as P
+
+            def f(mesh, x):
+                def inner(a):
+                    return a, a
+                return compat.shard_map(
+                    inner, mesh=mesh, in_specs=(P("data"),),
+                    out_specs=(P("data"), P("data"), P(None)))(x)
+        """)
+        assert len(found) == 1
+        assert "out_specs" in found[0].message
+
+    def test_clean_declared_axes_and_matching_arity(self, tmp_path):
+        found = run_rule(tmp_path, ShardSafetyRule(axes=AXES), """
+            from repro import compat
+            from jax import lax
+            from jax.sharding import PartitionSpec as P
+
+            def f(mesh, x, y):
+                def inner(a, b):
+                    return a + lax.psum(b, "model"), b
+
+                return compat.shard_map(
+                    inner, mesh=mesh,
+                    in_specs=(P("data"), P(None)),
+                    out_specs=(P("data"), P(None)))(x, y)
+        """)
+        assert found == []
+
+    def test_vocabulary_parsed_from_real_mesh_builders(self):
+        from repro.analysis.rules.shard_safety import axes_from_mesh_builder
+        axes = axes_from_mesh_builder(REPO / "src/repro/launch/mesh.py")
+        assert {"data", "model"} <= axes
+
+
+# ---------------------------------------------------------------------------
+# checkpoint-aliasing
+# ---------------------------------------------------------------------------
+
+class TestCheckpointAliasing:
+    def test_flags_asarray_on_commit_path(self, tmp_path):
+        # the PR 5 race: asarray(acc) with matching dtype returns the
+        # live accumulator itself
+        found = run_rule(tmp_path, CheckpointAliasingRule(), """
+            import numpy as np
+            from repro.checkpoint.manager import CheckpointManager
+
+            def save(ckpt_dir, step, acc):
+                mgr = CheckpointManager(ckpt_dir)
+                tree = {"a_acc": np.asarray(acc, np.float64)}
+                mgr.save(step, tree)
+        """)
+        assert len(found) == 1
+        assert "asarray" in found[0].message
+
+    def test_flags_live_attribute_and_view(self, tmp_path):
+        found = run_rule(tmp_path, CheckpointAliasingRule(), """
+            from repro.checkpoint.manager import CheckpointManager
+
+            def save(ckpt_dir, step, state, buf):
+                mgr = CheckpointManager(ckpt_dir)
+                mgr.save(step, {"x": state.x, "rows": buf[2:]})
+        """)
+        assert len(found) == 2
+        msgs = "\n".join(f.message for f in found)
+        assert "live array reference" in msgs
+        assert "view" in msgs
+
+    def test_flags_mutation_of_returned_tree(self, tmp_path):
+        # the WaveCheckpointer thunk protocol: tree[...] = np.asarray(...)
+        found = run_rule(tmp_path, CheckpointAliasingRule(), """
+            import numpy as np
+            from repro.outofcore.runtime import WaveCheckpointer
+
+            def run(ckpt_dir, step, acc):
+                ck = WaveCheckpointer(ckpt_dir)
+
+                def tree_fn():
+                    tree = {}
+                    tree["a_acc"] = np.asarray(acc, np.float64)
+                    return tree
+
+                ck.save(step, tree_fn)
+        """)
+        assert len(found) == 1
+        assert "asarray" in found[0].message
+
+    def test_clean_materialized_copies(self, tmp_path):
+        found = run_rule(tmp_path, CheckpointAliasingRule(), """
+            import numpy as np
+            from repro.checkpoint.manager import CheckpointManager
+
+            def save(ckpt_dir, step, x, acc):
+                mgr = CheckpointManager(ckpt_dir)
+                tree = {"x": x.copy(),
+                        "a_acc": np.array(acc, np.float64),
+                        "step": step}
+                mgr.save(step, tree)
+        """)
+        assert found == []
+
+
+# ---------------------------------------------------------------------------
+# engine: suppressions, baseline, parse errors
+# ---------------------------------------------------------------------------
+
+class TestEngine:
+    BAD = """
+        from jax.experimental.shard_map import shard_map
+    """
+
+    def test_suppression_comment_silences_the_rule(self, tmp_path):
+        src = ("from jax.experimental.shard_map import shard_map"
+               "  # reprolint: disable=compat-routing\n")
+        found = run_rule(tmp_path, CompatRoutingRule(), src)
+        assert found == []
+
+    def test_suppression_disable_all(self, tmp_path):
+        src = ("from jax.experimental.shard_map import shard_map"
+               "  # reprolint: disable=all\n")
+        found = run_rule(tmp_path, CompatRoutingRule(), src)
+        assert found == []
+
+    def test_suppressing_a_different_rule_does_not_silence(self, tmp_path):
+        src = ("from jax.experimental.shard_map import shard_map"
+               "  # reprolint: disable=pallas-budget\n")
+        found = run_rule(tmp_path, CompatRoutingRule(), src)
+        assert len(found) >= 1
+
+    def test_baseline_round_trip(self, tmp_path):
+        path = tmp_path / "src/mod.py"
+        path.parent.mkdir(parents=True)
+        path.write_text(textwrap.dedent(self.BAD))
+        cfg = AnalysisConfig(root=tmp_path, rules=[CompatRoutingRule()],
+                             paths=[path])
+        first, _ = run_analysis(cfg)
+        assert first
+
+        bl_path = tmp_path / "baseline.json"
+        Baseline.write(bl_path, first)
+        baseline = Baseline.load(bl_path)
+
+        cfg = AnalysisConfig(root=tmp_path, rules=[CompatRoutingRule()],
+                             baseline=baseline, paths=[path])
+        new, grandfathered = run_analysis(cfg)
+        assert new == []
+        assert [f.fingerprint for f in grandfathered] == \
+            [f.fingerprint for f in first]
+
+    def test_baseline_survives_line_number_churn(self, tmp_path):
+        path = tmp_path / "src/mod.py"
+        path.parent.mkdir(parents=True)
+        path.write_text(textwrap.dedent(self.BAD))
+        cfg = AnalysisConfig(root=tmp_path, rules=[CompatRoutingRule()],
+                             paths=[path])
+        first, _ = run_analysis(cfg)
+        bl_path = tmp_path / "baseline.json"
+        Baseline.write(bl_path, first)
+
+        # push the offending line down: identity is the snippet, not the
+        # line number
+        path.write_text("# a new comment\n\n" + textwrap.dedent(self.BAD))
+        cfg = AnalysisConfig(root=tmp_path, rules=[CompatRoutingRule()],
+                             baseline=Baseline.load(bl_path), paths=[path])
+        new, grandfathered = run_analysis(cfg)
+        assert new == []
+        assert len(grandfathered) == len(first)
+
+    def test_baseline_rejects_empty_justification(self, tmp_path):
+        bl_path = tmp_path / "baseline.json"
+        bl_path.write_text(json.dumps({"findings": [
+            {"rule": "compat-routing", "path": "src/mod.py",
+             "snippet": "x = 1", "justification": ""}]}))
+        with pytest.raises(ValueError, match="justification"):
+            Baseline.load(bl_path)
+
+    def test_baseline_write_preserves_old_justifications(self, tmp_path):
+        f = Finding(rule="compat-routing", path="src/mod.py", line=1,
+                    col=0, message="m", snippet="bad line")
+        bl_path = tmp_path / "baseline.json"
+        old = Baseline(entries={f.fingerprint: "known debt, see PR 3"})
+        Baseline.write(bl_path, [f], old=old)
+        data = json.loads(bl_path.read_text())
+        assert data["findings"][0]["justification"] == "known debt, see PR 3"
+
+    def test_parse_error_becomes_a_finding(self, tmp_path):
+        found = run_rule(tmp_path, CompatRoutingRule(),
+                         "def broken(:\n    pass\n")
+        assert len(found) == 1
+        assert found[0].rule == "parse-error"
+
+
+# ---------------------------------------------------------------------------
+# CLI: --rule validation mirrors benchmarks/run.py --only
+# ---------------------------------------------------------------------------
+
+class TestCLI:
+    def test_rule_catalog_is_complete(self):
+        assert sorted(rule_names()) == ["checkpoint-aliasing",
+                                        "compat-routing", "pallas-budget",
+                                        "precision-drift", "shard-safety"]
+        assert len(ALL_RULES) == 5
+
+    def test_get_rules_unknown_name_fails_loudly(self):
+        with pytest.raises(ValueError, match="unknown rule name"):
+            get_rules(["compat-routing", "nope"])
+
+    def test_cli_unknown_rule_exits_2(self, capsys):
+        with pytest.raises(SystemExit) as exc:
+            cli_main(["--rule", "nope"])
+        assert exc.value.code == 2
+        assert "unknown rule name" in capsys.readouterr().err
+
+    def test_cli_list_rules(self, capsys):
+        assert cli_main(["--list-rules"]) == 0
+        out = capsys.readouterr().out
+        for name in rule_names():
+            assert name in out
+
+    def test_cli_fails_on_seeded_violation_and_emits_json(self, tmp_path,
+                                                          capsys):
+        bad = tmp_path / "src" / "mod.py"
+        bad.parent.mkdir(parents=True)
+        bad.write_text("from jax.experimental.shard_map import shard_map\n")
+        (tmp_path / "pyproject.toml").write_text("[project]\n")
+        out_json = tmp_path / "findings.json"
+        rc = cli_main([str(bad), "--root", str(tmp_path),
+                       "--rule", "compat-routing", "--json", str(out_json)])
+        assert rc == 1
+        payload = json.loads(out_json.read_text())
+        assert payload["rules"] == ["compat-routing"]
+        assert len(payload["new"]) >= 1
+        assert payload["new"][0]["path"] == "src/mod.py"
+
+    def test_cli_repo_is_clean_at_merge(self):
+        # the acceptance criterion: python -m repro.analysis exits 0
+        assert cli_main(["--root", str(REPO)]) == 0
+
+
+# ---------------------------------------------------------------------------
+# budgets: the declared contract agrees with the mesh model
+# ---------------------------------------------------------------------------
+
+class TestBudgets:
+    def test_vmem_mirror_matches_launch_mesh(self):
+        from repro.kernels import budgets
+        from repro.launch import mesh
+        assert budgets.VMEM_BYTES == mesh.VMEM_BYTES
+
+    def test_every_budget_fits_the_chip(self):
+        from repro.kernels.budgets import BUDGETS, VMEM_BYTES
+        for name, b in BUDGETS.items():
+            assert 0 < b.vmem_limit <= VMEM_BYTES, name
+            assert b.dim_bounds, name
+            assert b.note, name

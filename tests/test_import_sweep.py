@@ -3,8 +3,11 @@
 1. Import every ``repro.*`` module — a renamed/removed JAX symbol at
    module scope (the failure mode that killed the seed suite) now fails
    here, loudly, instead of silently dropping test modules at collection.
-2. Grep-style ban: version-sensitive JAX names must only ever be spelled
-   inside ``src/repro/compat.py`` so the next rename is a one-file fix.
+2. Compat-routing audit: version-sensitive JAX surfaces must only ever
+   be spelled inside ``src/repro/compat.py`` so the next rename is a
+   one-file fix.  This used to be a string grep; it now invokes the
+   reprolint ``compat-routing`` rule so this test and ``python -m
+   repro.analysis`` cannot drift apart.
 """
 import importlib
 import pathlib
@@ -41,30 +44,20 @@ def test_module_imports(name):
 
 
 # ---------------------------------------------------------------------------
-# Banned-name audit: AxisType / CompilerParams / TPUCompilerParams may only
-# appear in repro/compat.py (plus this checker and the compat unit tests,
-# which spell them to simulate both shim branches).
+# Compat-routing audit: AxisType / CompilerParams / direct shard_map /
+# direct pallas_call may only appear in repro/compat.py.  The rule's own
+# `exclude` tuple carries the allow-list (the shim, the compat unit tests
+# that spell both branches, and this file).
 # ---------------------------------------------------------------------------
-
-BANNED = ("AxisType", "CompilerParams", "TPUCompilerParams")
-ALLOWED = {SRC / "compat.py", pathlib.Path(__file__),
-           pathlib.Path(__file__).parent / "test_compat.py"}
 
 
 def test_version_sensitive_names_only_in_compat():
-    offenders = []
-    for root in (REPO / "src", REPO / "tests", REPO / "benchmarks",
-                 REPO / "examples"):
-        if not root.is_dir():
-            continue
-        for path in sorted(root.rglob("*.py")):
-            if path in ALLOWED:
-                continue
-            text = path.read_text()
-            for lineno, line in enumerate(text.splitlines(), 1):
-                if any(name in line for name in BANNED):
-                    offenders.append(f"{path.relative_to(REPO)}:{lineno}: "
-                                     f"{line.strip()}")
-    assert not offenders, (
-        "version-sensitive JAX names outside repro/compat.py "
-        "(route them through the compat shim):\n" + "\n".join(offenders))
+    from repro.analysis.engine import AnalysisConfig, run_analysis
+    from repro.analysis.rules.compat_routing import CompatRoutingRule
+
+    new, _ = run_analysis(
+        AnalysisConfig(root=REPO, rules=[CompatRoutingRule()]))
+    assert not new, (
+        "version-sensitive JAX surfaces outside repro/compat.py "
+        "(route them through the compat shim):\n"
+        + "\n".join(f.format() for f in new))
