@@ -97,7 +97,10 @@ def run(quick: bool = False):
                  waves_per_epoch=sched.waves_per_epoch,
                  capacity_bytes=tel.capacity_bytes,
                  peak_bytes=tel.peak_bytes,
-                 bytes_streamed=tel.bytes_streamed)
+                 bytes_streamed=tel.bytes_streamed,
+                 wall_seconds=tel.wall_seconds,
+                 phase_seconds={k: round(v, 4)
+                                for k, v in tel.phase_seconds.items()})
     assert rec["peak_bytes"] <= rec["capacity_bytes"], rec
 
     # p > 1 mesh row: the same tile waves sharded one-tile-per-device over a
@@ -116,7 +119,10 @@ def run(quick: bool = False):
                       mesh_shape={"data": 4, "model": 2},
                       capacity_bytes=mtel.capacity_bytes,
                       peak_bytes=mtel.peak_bytes,
-                      bytes_streamed=mtel.bytes_streamed)
+                      bytes_streamed=mtel.bytes_streamed,
+                      wall_seconds=mtel.wall_seconds,
+                      phase_seconds={k: round(v, 4)
+                                     for k, v in mtel.phase_seconds.items()})
         assert mrec["peak_bytes"] <= mrec["capacity_bytes"], mrec
         assert abs(mrec["final_rmse"] - rec["final_rmse"]) < 1e-3, \
             (mrec["final_rmse"], rec["final_rmse"])

@@ -57,6 +57,9 @@ def main(argv=None) -> None:
     ap.add_argument("--only", action="append", default=[], metavar="NAME",
                     help="run only the named benchmark (repeatable); "
                          f"names: {', '.join(n for n, _ in MODULES)}")
+    ap.add_argument("--trace", default=None, metavar="OUT.json",
+                    help="record obs spans across every selected benchmark "
+                         "and write one Chrome-trace/Perfetto JSON file")
     args = ap.parse_args(argv)
 
     known = {n for n, _ in MODULES}
@@ -71,20 +74,33 @@ def main(argv=None) -> None:
     else:
         selected = known
 
+    tracer = None
+    if args.trace:
+        from repro.obs import Tracer, set_tracer
+        tracer = Tracer()
+        set_tracer(tracer)      # streaming drivers pick it up themselves
+
     print("name,us_per_call,derived")
-    for name, modname in MODULES:
-        if name not in selected:
-            continue
-        mod = importlib.import_module(f"benchmarks.{modname}")
-        kwargs = {}
-        if args.quick and "quick" in inspect.signature(mod.run).parameters:
-            kwargs["quick"] = True
-        out = mod.run(**kwargs)
-        json_out = getattr(mod, "JSON_OUT", None)
-        if json_out and out:
-            with open(json_out, "w") as f:
-                json.dump(out, f, indent=2)
-            print(f"# wrote {len(out)} records to {json_out}", flush=True)
+    try:
+        for name, modname in MODULES:
+            if name not in selected:
+                continue
+            mod = importlib.import_module(f"benchmarks.{modname}")
+            kwargs = {}
+            if args.quick and "quick" in inspect.signature(mod.run).parameters:
+                kwargs["quick"] = True
+            out = mod.run(**kwargs)
+            json_out = getattr(mod, "JSON_OUT", None)
+            if json_out and out:
+                with open(json_out, "w") as f:
+                    json.dump(out, f, indent=2)
+                print(f"# wrote {len(out)} records to {json_out}", flush=True)
+    finally:
+        if tracer is not None:
+            from repro.obs import write_trace
+            write_trace(args.trace, tracer, process_name="benchmarks")
+            print(f"# trace: {len(tracer.events)} events -> {args.trace}",
+                  flush=True)
 
 
 if __name__ == '__main__':

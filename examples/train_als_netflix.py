@@ -234,12 +234,12 @@ def run_out_of_core(spec, r, rte, args):
         tiles, sgd_sched = _sgd_tiles_and_schedule(spec, r, args)
         warm = als_mod.AlsConfig(f=spec.f, lam=spec.lam, iters=args.iters,
                                  mode="ref", batch_rows=16_384)
-        _, _, (atel, stel) = run_streaming_hybrid(
+        _, _, tel = run_streaming_hybrid(
             store, als_sched, tiles, sgd_sched, warm, SgdConfig(**sgd_cfg_kw),
             ckpt_dir=ckpt, test_eval=rtest, mesh=mesh, callback=progress)
-        for phase, tel in (("als", atel), ("sgd", stel)):
-            if tel is not None:
-                print(f"[{phase}] " + _tel_summary(tel, ckpt))
+        print("[hybrid] " + _tel_summary(tel, ckpt))
+        for name, part in sorted(tel.phases.items()):
+            print(f"  [{name}] " + _tel_summary(part, ckpt))
 
 
 def run_sgd(spec, r, rt, rte, args):
@@ -308,6 +308,10 @@ def main():
                          "model) device mesh, e.g. --mesh 2,2 (p=2 theta "
                          "shards + topology-aware reduction); overrides "
                          "--n-data with the data-axis size")
+    ap.add_argument("--trace", default=None, metavar="OUT.json",
+                    help="record obs spans for the whole run and write a "
+                         "Chrome-trace/Perfetto JSON file (load it at "
+                         "ui.perfetto.dev)")
     args = ap.parse_args()
     if args.mesh and not args.out_of_core:
         # checked here, not in _build_mesh: the in-core paths never reach
@@ -315,6 +319,12 @@ def main():
         # they measured the mesh path
         ap.error("--mesh requires --out-of-core (the in-core paths use "
                  "their own sharding entry points)")
+
+    tracer = None
+    if args.trace:
+        from repro.obs import Tracer, set_tracer
+        tracer = Tracer()
+        set_tracer(tracer)      # the drivers pick it up via current_tracer
 
     if args.full:
         spec = synth.SynthSpec("netflix", 480_189, 17_770, 99_000_000,
@@ -334,13 +344,24 @@ def main():
     print(f"synthesized {r.nnz} ratings in {time.time()-t0:.1f}s "
           f"(K={r.K}, fill={r.fill:.2f}x)")
 
-    if args.out_of_core:
-        run_out_of_core(spec, r, rte, args)
-        return
-    if args.solver != "als":
-        run_sgd(spec, r, rt, rte, args)
-        return
+    try:
+        if args.out_of_core:
+            run_out_of_core(spec, r, rte, args)
+            return
+        if args.solver != "als":
+            run_sgd(spec, r, rt, rte, args)
+            return
+        run_incore_als(spec, r, rt, rte, args)
+    finally:
+        if tracer is not None:
+            from repro.obs import write_trace
+            write_trace(args.trace, tracer)
+            print(f"trace: {len(tracer.events)} events -> {args.trace} "
+                  f"(load at ui.perfetto.dev)")
 
+
+def run_incore_als(spec, r, rt, rte, args):
+    """The in-core paper loop: full-matrix ALS sweeps with checkpointing."""
     cfg = als_mod.AlsConfig(f=spec.f, lam=spec.lam, iters=1, mode="ref",
                             batch_rows=16_384)
     mgr = CheckpointManager(args.ckpt, keep=2)

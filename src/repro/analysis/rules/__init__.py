@@ -12,6 +12,7 @@ from typing import Optional, Sequence
 from repro.analysis.engine import Rule
 from repro.analysis.rules.checkpoint_aliasing import CheckpointAliasingRule
 from repro.analysis.rules.compat_routing import CompatRoutingRule
+from repro.analysis.rules.obs_routing import ObsRoutingRule
 from repro.analysis.rules.pallas_budget import PallasBudgetRule
 from repro.analysis.rules.precision_drift import PrecisionDriftRule
 from repro.analysis.rules.shard_safety import ShardSafetyRule
@@ -22,6 +23,7 @@ ALL_RULES: tuple[Rule, ...] = (
     PrecisionDriftRule(),
     ShardSafetyRule(),
     CheckpointAliasingRule(),
+    ObsRoutingRule(),
 )
 
 
@@ -43,5 +45,5 @@ def get_rules(names: Optional[Sequence[str]] = None) -> list[Rule]:
 
 
 __all__ = ["ALL_RULES", "CheckpointAliasingRule", "CompatRoutingRule",
-           "PallasBudgetRule", "PrecisionDriftRule", "ShardSafetyRule",
-           "get_rules", "rule_names"]
+           "ObsRoutingRule", "PallasBudgetRule", "PrecisionDriftRule",
+           "ShardSafetyRule", "get_rules", "rule_names"]

@@ -1,0 +1,78 @@
+"""obs-routing: raw wall-clock reads in ``src/repro/`` route through obs.
+
+ISSUE 7's tentpole moved all driver timing onto the ``repro.obs`` layer:
+``obs.trace.phase`` (span + always-on per-phase metrics from one clock
+pair) and the ``Tracer`` span API are the sanctioned ways to time code.  A
+bare ``time.perf_counter()`` / ``time.time()`` call re-opens the split
+world this PR closed — wall-clock numbers that exist next to, and drift
+from, the telemetry the registry reports (``StreamTelemetry.wall_seconds``
+was exactly such a duplicate before).
+
+The rule flags calls to ``time.time``, ``time.perf_counter``,
+``time.monotonic`` (and their ``_ns`` variants) anywhere under
+``src/repro/`` except ``obs/`` itself — the one place allowed to read the
+clock, since every sanctioned timer is built there.  Scope is deliberately
+``src`` only: tests, benches and examples time things ad hoc by design
+(bench harness wall-clocks ARE the measurement).  Deliberate holdouts are
+grandfathered in ``reprolint_baseline.json`` with justifications, e.g. the
+launch dry-run's compile-latency probes, which measure jit/compile wall
+time standalone rather than a streaming phase.
+"""
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.engine import Finding, ParsedModule, Rule, call_name
+
+#: clock-reading callables that must not be spelled directly
+BANNED_CLOCKS = ("time", "perf_counter", "monotonic",
+                 "time_ns", "perf_counter_ns", "monotonic_ns")
+
+
+class ObsRoutingRule(Rule):
+    name = "obs-routing"
+    description = ("bare time.time()/time.perf_counter() in src/repro/ "
+                   "outside obs/; time code with obs.trace.phase or a "
+                   "Tracer span")
+    roots = ("src",)
+    exclude = (
+        "src/repro/obs",             # the layer that implements the timers
+    )
+
+    def check_module(self, mod: ParsedModule) -> list[Finding]:
+        # which local names are the time module / its clock functions?
+        # (`import time`, `import time as t`, `from time import perf_counter`)
+        time_aliases: set[str] = set()
+        clock_names: dict[str, str] = {}
+        for node in ast.walk(mod.tree):
+            if isinstance(node, ast.Import):
+                for alias in node.names:
+                    if alias.name == "time":
+                        time_aliases.add(alias.asname or "time")
+            elif isinstance(node, ast.ImportFrom) and node.module == "time":
+                for alias in node.names:
+                    if alias.name in BANNED_CLOCKS:
+                        clock_names[alias.asname or alias.name] = alias.name
+
+        out: list[Finding] = []
+        for node in ast.walk(mod.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            dotted = call_name(node)
+            if dotted is None:
+                continue
+            parts = dotted.split(".")
+            offender = None
+            if (len(parts) == 2 and parts[0] in time_aliases
+                    and parts[1] in BANNED_CLOCKS):
+                offender = f"time.{parts[1]}"
+            elif len(parts) == 1 and parts[0] in clock_names:
+                offender = f"time.{clock_names[parts[0]]}"
+            if offender is not None:
+                out.append(mod.finding(
+                    self.name, node,
+                    f"bare {offender}() in src/repro/ — time phases with "
+                    f"obs.trace.phase(cat=...) (always-on metrics + "
+                    f"opt-in span) or tracer.span(); only repro.obs may "
+                    f"read the clock directly"))
+        return out

@@ -13,6 +13,15 @@ the prefetcher as a context manager — otherwise the worker thread would sit
 blocked forever on a full queue.  ``close()`` wakes a blocked worker, drains
 the queue, and joins the thread; it is idempotent and safe after normal
 exhaustion.
+
+Observability (``tracer=`` / ``registry=``): the worker thread records one
+``prefetch_load`` span per item around the ``put`` transform (the actual
+load + device_put work, on its own named thread track), and the consumer
+records one ``prefetch`` span per ``__next__`` around the queue wait — the
+time compute actually stalled on streaming.  A well-hidden pipeline shows
+long ``prefetch_load`` spans and near-zero ``prefetch`` spans; the inverse
+means the budget or depth is wrong.  The registry additionally counts
+``prefetch/items`` and samples queue depth at each hand-off.
 """
 from __future__ import annotations
 
@@ -22,18 +31,24 @@ from typing import Callable, Iterator, Optional
 
 import jax
 
+from repro.obs.trace import phase
+
 _POLL_S = 0.05
 
 
 class Prefetcher:
     def __init__(self, it: Iterator, *, depth: int = 2,
-                 put: Optional[Callable] = None):
+                 put: Optional[Callable] = None,
+                 tracer=None, registry=None):
         self._it = it
         self._put = put or (lambda x: jax.tree.map(jax.device_put, x))
         self._q: queue.Queue = queue.Queue(maxsize=depth)
         self._done = object()
         self._stop = threading.Event()
-        self._thread = threading.Thread(target=self._worker, daemon=True)
+        self._tracer = tracer
+        self._registry = registry
+        self._thread = threading.Thread(target=self._worker, daemon=True,
+                                        name="prefetch-worker")
         self._thread.start()
 
     def _offer(self, item) -> bool:
@@ -51,10 +66,13 @@ class Prefetcher:
             for item in self._it:
                 if self._stop.is_set():
                     return
-                if not self._offer(self._put(item)):  # device_put is async:
-                    return                            # the transfer runs while
-        except BaseException as e:                    # compute proceeds on
-            self._offer(e)                            # earlier batches
+                with phase("prefetch.load", cat="prefetch_load",
+                           tracer=self._tracer, registry=self._registry):
+                    loaded = self._put(item)      # device_put is async: the
+                if not self._offer(loaded):       # transfer runs while
+                    return                        # compute proceeds on
+        except BaseException as e:                # earlier batches
+            self._offer(e)
             return
         self._offer(self._done)
 
@@ -84,7 +102,14 @@ class Prefetcher:
     def __next__(self):
         if self._stop.is_set():
             raise StopIteration
-        item = self._q.get()
+        with phase("prefetch.wait", cat="prefetch",
+                   tracer=self._tracer, registry=self._registry):
+            item = self._q.get()
+        if self._registry is not None:
+            self._registry.gauge("prefetch/queue_depth").set(
+                self._q.qsize())
+            if not (item is self._done or isinstance(item, BaseException)):
+                self._registry.counter("prefetch/items").inc()
         if item is self._done:
             raise StopIteration
         if isinstance(item, BaseException):

@@ -84,24 +84,52 @@ def allreduce_oracle(parts: Sequence[np.ndarray]) -> np.ndarray:
 
 
 def topology_reduce(parts: Sequence[np.ndarray],
-                    topo: DeviceTopology | None = None) -> np.ndarray:
+                    topo: DeviceTopology | None = None,
+                    tracer=None) -> np.ndarray:
     """Staged ring/tree reduction of per-device partials (float64).
 
     ``parts[d]`` is device ``d``'s partial.  ``topo`` defaults to one flat
     group (pure ring).  The schedule is a pure function of the topology, so
     repeated runs — and runs from differently-ordered host containers, as
     long as indexing by device id is preserved — are bit-identical.
+
+    With ``tracer`` set (an enabled ``obs.Tracer``) each stage records a
+    ``reduce`` span tagged with the bytes it moves and which link class
+    carries them — the ring stage with its fast-domain traffic, every tree
+    round with its slow-link crossings — so a trace shows where the
+    reduction's wall time and bytes actually went.
     """
     if topo is None:
         topo = linear_topology(len(parts), group_size=len(parts))
     assert topo.n_devices == len(parts), (topo.n_devices, len(parts))
+    traced = tracer is not None and getattr(tracer, "enabled", False)
+    nbytes = int(np.asarray(parts[0]).nbytes)
+    traffic = reduce_traffic(nbytes, topo) if traced else None
     # stage 1: intra-group ring — ascending fold inside each fast domain
-    stage = [allreduce_oracle([parts[d] for d in g]) for g in topo.groups]
+    if traced:
+        with tracer.span("reduce.ring", cat="reduce", stage="ring",
+                         link="fast", groups=len(topo.groups),
+                         bytes=traffic["fast_link_bytes"]):
+            stage = [allreduce_oracle([parts[d] for d in g])
+                     for g in topo.groups]
+    else:
+        stage = [allreduce_oracle([parts[d] for d in g])
+                 for g in topo.groups]
     # stage 2: inter-group tree — pairwise rounds over group partials
+    rnd = 0
     while len(stage) > 1:
+        rnd += 1
         nxt = []
-        for i in range(0, len(stage) - 1, 2):
-            nxt.append(stage[i] + stage[i + 1])
+        if traced:
+            pairs = len(stage) // 2
+            with tracer.span("reduce.tree", cat="reduce", stage="tree",
+                             link="slow", round=rnd,
+                             bytes=nbytes * pairs):
+                for i in range(0, len(stage) - 1, 2):
+                    nxt.append(stage[i] + stage[i + 1])
+        else:
+            for i in range(0, len(stage) - 1, 2):
+                nxt.append(stage[i] + stage[i + 1])
         if len(stage) % 2:
             nxt.append(stage[-1])
         stage = nxt

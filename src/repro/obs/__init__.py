@@ -1,0 +1,33 @@
+"""repro.obs — span tracing, metrics, and Chrome-trace export.
+
+The observability layer for the streaming/mesh stack (see
+OBSERVABILITY.md for the span/metric catalog and a how-to):
+
+- ``obs.trace`` — thread-aware span tracer (no-op unless enabled), the
+  ``phase`` helper that also feeds per-phase metrics, and the
+  process-wide ``set_tracer``/``current_tracer`` hook ``--trace``
+  installs.
+- ``obs.metrics`` — counters / gauges / fixed-bucket histograms;
+  ``StreamTelemetry`` is a view over one of these registries.
+- ``obs.export`` — Chrome-trace / Perfetto JSON emission + the schema
+  validator CI runs over the emitted file.
+
+Stdlib-only on purpose (like ``repro.analysis``): the lint job and the
+import sweep load it in any environment the repo loads in, and nothing in
+the hot path pulls jax/numpy through the instrumentation.
+"""
+from repro.obs.export import (chrome_trace, load_and_validate, span_counts,
+                              validate_chrome_trace, write_trace)
+from repro.obs.metrics import (DEFAULT_LATENCY_BUCKETS, Counter, Gauge,
+                               Histogram, MetricsRegistry)
+from repro.obs.trace import (NOOP_SPAN, NULL_TRACER, NullTracer, SpanEvent,
+                             Tracer, current_tracer, phase, set_tracer,
+                             traced)
+
+__all__ = [
+    "Counter", "DEFAULT_LATENCY_BUCKETS", "Gauge", "Histogram",
+    "MetricsRegistry", "NOOP_SPAN", "NULL_TRACER", "NullTracer",
+    "SpanEvent", "Tracer", "chrome_trace", "current_tracer",
+    "load_and_validate", "phase", "set_tracer", "span_counts", "traced",
+    "validate_chrome_trace", "write_trace",
+]

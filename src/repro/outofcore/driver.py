@@ -43,7 +43,6 @@ instead of one model-shard's simulated view:
 """
 from __future__ import annotations
 
-import time
 from typing import Callable, List, Optional
 
 import jax
@@ -54,6 +53,8 @@ from repro.checkpoint import CheckpointManager
 from repro.core import als as als_mod
 from repro.core.objective import rmse_padded
 from repro.data.prefetch import Prefetcher
+from repro.obs.metrics import MetricsRegistry
+from repro.obs.trace import current_tracer, phase
 from repro.outofcore.runtime import (MemoryMeter, SimulatedFailure,
                                      StreamTelemetry, WaveCheckpointer)
 from repro.outofcore.schedule import IterationSchedule
@@ -113,12 +114,26 @@ def run_streaming_als(
     mesh=None,
     topology=None,
     callback=None,
+    tracer=None,
+    registry=None,
 ) -> tuple[FactorStore, List[dict], StreamTelemetry]:
     """Run ``cfg.iters`` streaming ALS iterations of ``sched`` over ``ratings``.
 
     Returns (factor store, per-iteration history, telemetry).  With
     ``ckpt_dir`` set the run resumes from the latest committed wave; the
     ``*_fn`` hooks default to the in-process ``core.als`` entry points.
+
+    Observability: every hot phase runs inside an ``obs`` span — the whole
+    run (``driver``), each iteration/half, one ``solve`` span per wave,
+    ``reduce`` for the mesh epilogue, ``checkpoint`` per commit — and all
+    counting/timing goes through ``registry`` (an ``obs.MetricsRegistry``;
+    one is created when not passed).  ``tracer`` defaults to the
+    process-wide tracer (``obs.set_tracer`` / ``--trace``); with the
+    default ``NULL_TRACER`` the spans are no-ops and only the cheap
+    per-wave metrics remain.  The returned telemetry is
+    ``StreamTelemetry.from_registry`` — same fields as ever, plus the
+    ``phase_seconds`` breakdown, which each history record also carries as
+    its per-iteration delta.
 
     With ``mesh`` set (axes ``("data", "model")``, sizes matching
     ``sched.n_data`` and ``sched.p``) every wave executes shard-mapped on
@@ -165,10 +180,9 @@ def run_streaming_als(
         fixed_sh = NamedSharding(mesh, P(col_dim, None))
 
     meter = MemoryMeter()
-    tel = StreamTelemetry(capacity_bytes=sched.capacity_bytes)
-    if mesh is not None:
-        tel.topology = topo.describe()
-    t_start = time.perf_counter()
+    tracer = tracer if tracer is not None else current_tracer()
+    reg = registry if registry is not None else MetricsRegistry()
+    topo_desc = topo.describe() if mesh is not None else ""
 
     mgr = CheckpointManager(ckpt_dir, keep=keep) if ckpt_dir else None
     acc_restored = None
@@ -181,14 +195,15 @@ def run_streaming_als(
             factors = FactorStore.from_arrays(tree["x"], tree["theta"])
             if start_step % wpi > W:       # killed mid-accumulate-Theta
                 acc_restored = (tree["a_acc"], tree["b_acc"], tree["c_acc"])
-    tel.resumed_from_step = start_step
+    reg.gauge("resumed_from_step").set(start_step)
     if factors is None:
         st = als_mod.als_init(ratings.m, n, cfg)
         x0 = np.zeros((m_pad, f), np.float32)
         x0[:ratings.m] = np.asarray(st.x)
         factors = FactorStore.from_arrays(x0, np.asarray(st.theta))
 
-    ckpt = WaveCheckpointer(mgr, fail_after_waves)
+    ckpt = WaveCheckpointer(mgr, fail_after_waves,
+                            tracer=tracer, registry=reg)
 
     def _save(step: int, acc=None):
         def tree_fn():
@@ -231,17 +246,22 @@ def run_streaming_als(
             return wave, dev, nb
 
         try:
-            with Prefetcher(gen(), depth=prefetch_depth, put=put) as pf:
+            with Prefetcher(gen(), depth=prefetch_depth, put=put,
+                            tracer=tracer, registry=reg) as pf:
                 for wave, (idx, val, cnt), nb in pf:
-                    meter.alloc("x_scratch", scratch)
-                    rows = np.asarray(update_rows_fn(theta_dev, idx, val, cnt))
-                    meter.free("x_scratch")
-                    factors.write_slice("x", wave.row_start, wave.row_stop,
-                                        rows)
+                    with phase("als.wave_x", cat="solve", tracer=tracer,
+                               registry=reg, wave=wave.index,
+                               iteration=it + 1, bytes=nb):
+                        meter.alloc("x_scratch", scratch)
+                        rows = np.asarray(
+                            update_rows_fn(theta_dev, idx, val, cnt))
+                        meter.free("x_scratch")
+                        factors.write_slice("x", wave.row_start,
+                                            wave.row_stop, rows)
                     meter.free(f"xwave{wave.index}")
-                    tel.waves_run += 1
-                    tel.batches_loaded += len(wave.batches)
-                    tel.bytes_streamed += nb
+                    reg.counter("waves_run").inc()
+                    reg.counter("batches_loaded").inc(len(wave.batches))
+                    reg.counter("bytes_streamed").inc(nb)
                     _save(it * wpi + wave.index + 1)
         finally:
             meter.free("fixed_theta")
@@ -280,23 +300,28 @@ def run_streaming_als(
             return wave, dev, nb
 
         try:
-            with Prefetcher(gen(), depth=prefetch_depth, put=put) as pf:
+            with Prefetcher(gen(), depth=prefetch_depth, put=put,
+                            tracer=tracer, registry=reg) as pf:
                 for wave, payload, nb in pf:
-                    for _, (idx, val, cnt), x_dev in payload:
-                        Aj, Bj = partial_herm_fn(x_dev, idx, val, cnt)
-                        A = A + Aj
-                        B = B + Bj
-                        c = c + cnt.astype(jnp.float32)
-                    meter.free(f"twave{wave.index}")
-                    tel.waves_run += 1
-                    tel.batches_loaded += len(payload)
-                    tel.bytes_streamed += nb
                     last = wave.index == W - 1
-                    if last:
-                        meter.alloc("theta_out", n * f * 4)
-                        factors.write_slice(
-                            "theta", 0, n, np.asarray(solve_acc_fn(A, B, c)))
-                        meter.free("theta_out")
+                    with phase("als.wave_theta", cat="solve", tracer=tracer,
+                               registry=reg, wave=wave.index,
+                               iteration=it + 1, bytes=nb):
+                        for _, (idx, val, cnt), x_dev in payload:
+                            Aj, Bj = partial_herm_fn(x_dev, idx, val, cnt)
+                            A = A + Aj
+                            B = B + Bj
+                            c = c + cnt.astype(jnp.float32)
+                        meter.free(f"twave{wave.index}")
+                        if last:
+                            meter.alloc("theta_out", n * f * 4)
+                            factors.write_slice(
+                                "theta", 0, n,
+                                np.asarray(solve_acc_fn(A, B, c)))
+                            meter.free("theta_out")
+                    reg.counter("waves_run").inc()
+                    reg.counter("batches_loaded").inc(len(payload))
+                    reg.counter("bytes_streamed").inc(nb)
                     _save(it * wpi + W + wave.index + 1,
                           acc=None if last else (A, B, c))
         finally:
@@ -334,17 +359,22 @@ def run_streaming_als(
             return wave, dev, nb
 
         try:
-            with Prefetcher(gen(), depth=prefetch_depth, put=put) as pf:
+            with Prefetcher(gen(), depth=prefetch_depth, put=put,
+                            tracer=tracer, registry=reg) as pf:
                 for wave, (idx, val, cnt), nb in pf:
-                    meter.alloc("x_scratch", scratch)
-                    rows = np.asarray(custom_update(theta_dev, idx, val, cnt))
-                    meter.free("x_scratch")
-                    factors.write_slice("x", wave.row_start, wave.row_stop,
-                                        rows[:wave.rows])
+                    with phase("als.wave_x", cat="solve", tracer=tracer,
+                               registry=reg, wave=wave.index,
+                               iteration=it + 1, bytes=nb, mesh=True):
+                        meter.alloc("x_scratch", scratch)
+                        rows = np.asarray(
+                            custom_update(theta_dev, idx, val, cnt))
+                        meter.free("x_scratch")
+                        factors.write_slice("x", wave.row_start,
+                                            wave.row_stop, rows[:wave.rows])
                     meter.free(f"xwave{wave.index}")
-                    tel.waves_run += 1
-                    tel.batches_loaded += len(wave.batches)
-                    tel.bytes_streamed += nb
+                    reg.counter("waves_run").inc()
+                    reg.counter("batches_loaded").inc(len(wave.batches))
+                    reg.counter("bytes_streamed").inc(nb)
                     _save(it * wpi + wave.index + 1)
         finally:
             meter.free("fixed_theta")
@@ -392,21 +422,28 @@ def run_streaming_als(
             return wave, (x_stack, idxT, valT, cntT), trip_nb + x_nb
 
         try:
-            with Prefetcher(gen(), depth=prefetch_depth, put=put) as pf:
+            with Prefetcher(gen(), depth=prefetch_depth, put=put,
+                            tracer=tracer, registry=reg) as pf:
                 for wave, (x_stack, idxT, valT, cntT), nb in pf:
-                    A_w, B_w = wave_herm(x_stack, idxT, valT, cntT)
-                    # per-DATA-SHARD accumulation (float64: host stand-in
-                    # for the device-resident partials; exact for f32
-                    # summands, so the final topology reduce is order-free)
-                    A_dev += A_w
-                    B_dev += B_w
-                    c_dev += cntT
+                    with phase("als.wave_theta", cat="solve", tracer=tracer,
+                               registry=reg, wave=wave.index,
+                               iteration=it + 1, bytes=nb, mesh=True):
+                        A_w, B_w = wave_herm(x_stack, idxT, valT, cntT)
+                        # per-DATA-SHARD accumulation (float64: host
+                        # stand-in for the device-resident partials; exact
+                        # for f32 summands, so the final topology reduce is
+                        # order-free)
+                        A_dev += A_w
+                        B_dev += B_w
+                        c_dev += cntT
                     meter.free(f"twave{wave.index}")
-                    tel.waves_run += 1
-                    tel.batches_loaded += len(wave.batches)
-                    tel.bytes_streamed += nb
+                    reg.counter("waves_run").inc()
+                    reg.counter("batches_loaded").inc(len(wave.batches))
+                    reg.counter("bytes_streamed").inc(nb)
                     last = wave.index == W - 1
                     if last:
+                        # NOT nested in the wave's solve span: the reduce +
+                        # post-reduce shard solves are their own phase
                         _reduce_and_solve(A_dev, B_dev, c_dev)
                     _save(it * wpi + W + wave.index + 1,
                           acc=None if last else (A_dev, B_dev, c_dev))
@@ -416,13 +453,17 @@ def run_streaming_als(
     def _reduce_and_solve(A_dev, B_dev, c_dev):
         """Combine per-data-shard partials (paper Fig. 5b schedule), then
         each model shard solves and writes back its own theta rows."""
-        A = dreduce.topology_reduce(list(A_dev), topo)
-        B = dreduce.topology_reduce(list(B_dev), topo)
-        c = dreduce.topology_reduce(list(c_dev), topo)
         shard_f32 = n * (f * f + f + 1) * 4 // p   # one device's partial
         traffic = dreduce.reduce_traffic(shard_f32 * p, topo)
-        tel.reduce_fast_bytes += traffic["fast_link_bytes"]
-        tel.reduce_slow_bytes += traffic["slow_link_bytes"]
+        with phase("als.reduce_partials", cat="reduce", tracer=tracer,
+                   registry=reg, topology=topo_desc,
+                   fast_bytes=traffic["fast_link_bytes"],
+                   slow_bytes=traffic["slow_link_bytes"]):
+            A = dreduce.topology_reduce(list(A_dev), topo, tracer=tracer)
+            B = dreduce.topology_reduce(list(B_dev), topo, tracer=tracer)
+            c = dreduce.topology_reduce(list(c_dev), topo, tracer=tracer)
+        reg.counter("reduce_fast_bytes").inc(traffic["fast_link_bytes"])
+        reg.counter("reduce_slow_bytes").inc(traffic["slow_link_bytes"])
         meter.alloc("theta_out", n * f * 4 // p)
         npp = n // p
         for k in range(p):
@@ -439,29 +480,48 @@ def run_streaming_als(
     # ------------------------------------------------------------------
     history: List[dict] = []
     it0 = start_step // wpi
-    for it in range(it0, cfg.iters):
-        resume_here = it == it0
-        r = start_step % wpi if resume_here else 0
-        if r < W:
-            x_half(it, first_wave=r)
-        if r < wpi:
-            theta_half(it, first_wave=max(0, r - W),
-                       acc0=acc_restored if resume_here else None)
-        rec = {"iteration": it + 1, "waves_run": tel.waves_run,
-               "peak_bytes": meter.peak_bytes}
-        if train_eval is not None or test_eval is not None:
-            x_dev = jnp.asarray(factors.x[:ratings.m])
-            t_dev = jnp.asarray(factors.theta)
-            if test_eval is not None:
-                rec["test_rmse"] = float(rmse_padded(x_dev, t_dev, *test_eval))
-            if train_eval is not None:
-                rec["train_rmse"] = float(
-                    rmse_padded(x_dev, t_dev, *train_eval))
-        history.append(rec)
-        if callback is not None:
-            callback(it, rec)
-    if mgr is not None:
-        mgr.wait()
-    tel.peak_bytes = meter.peak_bytes
-    tel.wall_seconds = time.perf_counter() - t_start
-    return factors, history, tel
+    with phase("als.stream", cat="driver", tracer=tracer, registry=reg,
+               iterations=cfg.iters, waves=W, topology=topo_desc):
+        for it in range(it0, cfg.iters):
+            resume_here = it == it0
+            r = start_step % wpi if resume_here else 0
+            ph0 = reg.phase_seconds()
+            with phase("als.iteration", cat="iteration", tracer=tracer,
+                       registry=reg, iteration=it + 1):
+                if r < W:
+                    with phase("als.solve_x_half", cat="half",
+                               tracer=tracer, registry=reg,
+                               iteration=it + 1):
+                        x_half(it, first_wave=r)
+                if r < wpi:
+                    with phase("als.accumulate_theta_half", cat="half",
+                               tracer=tracer, registry=reg,
+                               iteration=it + 1):
+                        theta_half(it, first_wave=max(0, r - W),
+                                   acc0=acc_restored if resume_here
+                                   else None)
+            ph1 = reg.phase_seconds()
+            rec = {"iteration": it + 1,
+                   "waves_run": int(reg.counter("waves_run").value),
+                   "peak_bytes": meter.peak_bytes,
+                   "phase_seconds": {
+                       cat: s - ph0.get(cat, 0.0)
+                       for cat, s in ph1.items()
+                       if s - ph0.get(cat, 0.0) > 0.0}}
+            if train_eval is not None or test_eval is not None:
+                x_dev = jnp.asarray(factors.x[:ratings.m])
+                t_dev = jnp.asarray(factors.theta)
+                if test_eval is not None:
+                    rec["test_rmse"] = float(
+                        rmse_padded(x_dev, t_dev, *test_eval))
+                if train_eval is not None:
+                    rec["train_rmse"] = float(
+                        rmse_padded(x_dev, t_dev, *train_eval))
+            history.append(rec)
+            if callback is not None:
+                callback(it, rec)
+        if mgr is not None:
+            mgr.wait()
+    reg.gauge("peak_bytes").set(meter.peak_bytes)
+    return factors, history, StreamTelemetry.from_registry(
+        reg, capacity_bytes=sched.capacity_bytes, topology=topo_desc)

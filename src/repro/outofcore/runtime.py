@@ -6,12 +6,29 @@ execution substrate: a metered simulated-device footprint, telemetry of what
 actually streamed, per-wave checkpoint commits, and the simulated-kill hook
 the resume tests drive.  That substrate lives here so a new solver's driver
 only writes its wave loop.
+
+Since the observability layer landed (``repro.obs``), the drivers do all
+their counting and timing through an ``obs.MetricsRegistry`` —
+:class:`StreamTelemetry` is no longer mutated field by field but *computed*
+from the registry at the end of a run (:meth:`StreamTelemetry.from_registry`),
+with the same public fields callers always read.  The registry counter /
+gauge names that view reads are the contract::
+
+    counters: waves_run, batches_loaded, bytes_streamed,
+              reduce_fast_bytes, reduce_slow_bytes,
+              phase_seconds/<category>   (fed by obs.trace.phase)
+    gauges:   peak_bytes, resumed_from_step
+
+``wall_seconds`` is the total of the ``driver`` phase category — the span
+that wraps one whole streaming run.
 """
 from __future__ import annotations
 
 import dataclasses
 import threading
-from typing import Callable, Optional
+from typing import Callable, Mapping, Optional
+
+from repro.obs.trace import phase
 
 
 class MemoryMeter:
@@ -38,7 +55,20 @@ class MemoryMeter:
 
 @dataclasses.dataclass
 class StreamTelemetry:
-    """What the run actually did — peak footprint, traffic, resume point."""
+    """What the run actually did — peak footprint, traffic, resume point.
+
+    A read-only *view* built from the run's ``obs.MetricsRegistry`` (see
+    the module doc for the name contract); the classic fields are unchanged
+    so existing callers (benches, examples, tests) keep working, and two
+    breakdown fields ride along:
+
+    - ``phase_seconds``: total seconds per phase category (``prefetch``,
+      ``solve``, ``reduce``, ``checkpoint``, ...) — where the wall-clock
+      went.  For a merged hybrid telemetry the keys are prefixed with the
+      phase name (``als/solve``, ``sgd/solve``).
+    - ``phases``: for merged telemetries only, the per-phase
+      ``StreamTelemetry`` objects keyed by phase name (``als``/``sgd``).
+    """
 
     capacity_bytes: int = 0
     peak_bytes: int = 0
@@ -52,6 +82,63 @@ class StreamTelemetry:
     reduce_fast_bytes: int = 0   # intra-fast-domain ring traffic
     reduce_slow_bytes: int = 0   # inter-domain tree traffic
     topology: str = ""           # DeviceTopology.describe() of the reduce
+    # observability additions (ISSUE 7)
+    phase_seconds: dict = dataclasses.field(default_factory=dict)
+    phases: dict = dataclasses.field(default_factory=dict)
+
+    @classmethod
+    def from_registry(cls, registry, *, capacity_bytes: int = 0,
+                      topology: str = "") -> "StreamTelemetry":
+        """The post-run view over a driver's metrics registry."""
+        def cnt(name):
+            return registry.counter(name).value
+
+        phases = registry.phase_seconds()
+        return cls(
+            capacity_bytes=int(capacity_bytes),
+            peak_bytes=int(registry.gauge("peak_bytes").value),
+            waves_run=int(cnt("waves_run")),
+            batches_loaded=int(cnt("batches_loaded")),
+            bytes_streamed=int(cnt("bytes_streamed")),
+            resumed_from_step=int(registry.gauge("resumed_from_step").value),
+            wall_seconds=phases.get("driver", 0.0),
+            reduce_fast_bytes=int(cnt("reduce_fast_bytes")),
+            reduce_slow_bytes=int(cnt("reduce_slow_bytes")),
+            topology=topology,
+            phase_seconds=phases,
+        )
+
+
+def merge_telemetry(
+        parts: Mapping[str, Optional[StreamTelemetry]]) -> StreamTelemetry:
+    """One telemetry over a multi-phase run (the hybrid drivers).
+
+    ``parts`` maps phase name -> that phase's telemetry (None for a phase
+    that did not run, e.g. the ALS warm start skipped on resume).  Traffic
+    and time sum; capacity/peak take the max (each phase ran under its own
+    budget, and per-phase ``peak <= capacity`` implies the same for the
+    maxima); ``phase_seconds`` keys are prefixed with the phase name and
+    the full per-phase telemetries stay reachable under ``.phases``.
+    """
+    live = {k: t for k, t in parts.items() if t is not None}
+    assert live, "merge_telemetry needs at least one non-None phase"
+    tels = list(live.values())
+    return StreamTelemetry(
+        capacity_bytes=max(t.capacity_bytes for t in tels),
+        peak_bytes=max(t.peak_bytes for t in tels),
+        waves_run=sum(t.waves_run for t in tels),
+        batches_loaded=sum(t.batches_loaded for t in tels),
+        bytes_streamed=sum(t.bytes_streamed for t in tels),
+        resumed_from_step=max(t.resumed_from_step for t in tels),
+        wall_seconds=sum(t.wall_seconds for t in tels),
+        reduce_fast_bytes=sum(t.reduce_fast_bytes for t in tels),
+        reduce_slow_bytes=sum(t.reduce_slow_bytes for t in tels),
+        topology=next((t.topology for t in tels if t.topology), ""),
+        phase_seconds={f"{name}/{cat}": secs
+                       for name, t in live.items()
+                       for cat, secs in t.phase_seconds.items()},
+        phases=dict(live),
+    )
 
 
 class SimulatedFailure(RuntimeError):
@@ -64,17 +151,28 @@ class WaveCheckpointer:
     ``save`` takes the checkpoint tree as a thunk so the host-side snapshot
     copies are only made when a manager is actually attached; the kill fires
     *after* the wave's commit is durable (``mgr.wait()``), which is what lets
-    the resume tests demand bit-exact continuation.
+    the resume tests demand bit-exact continuation.  Each commit runs in a
+    ``checkpoint`` phase span covering the snapshot + async enqueue — the
+    host-blocking part of the §4.4 protocol (the background write itself is
+    deliberately off the clock; it overlaps the next wave).
     """
 
-    def __init__(self, mgr, fail_after_waves: Optional[int] = None):
+    def __init__(self, mgr, fail_after_waves: Optional[int] = None,
+                 tracer=None, registry=None):
         self.mgr = mgr
         self.fail_after_waves = fail_after_waves
         self.saves = 0
+        self._tracer = tracer
+        self._registry = registry
 
     def save(self, step: int, tree_fn: Callable[[], dict]) -> None:
         if self.mgr is not None:
-            self.mgr.save(step, tree_fn())
+            with phase("checkpoint.commit", cat="checkpoint",
+                       tracer=self._tracer, registry=self._registry,
+                       step=step):
+                self.mgr.save(step, tree_fn())
+            if self._registry is not None:
+                self._registry.counter("checkpoints_committed").inc()
         self.saves += 1
         if (self.fail_after_waves is not None
                 and self.saves >= self.fail_after_waves):

@@ -35,7 +35,6 @@ before writeback.
 """
 from __future__ import annotations
 
-import time
 from typing import List, Optional
 
 import jax
@@ -45,6 +44,8 @@ import numpy as np
 from repro.checkpoint import CheckpointManager
 from repro.core.objective import rmse_padded
 from repro.data.prefetch import Prefetcher
+from repro.obs.metrics import MetricsRegistry
+from repro.obs.trace import current_tracer, phase
 from repro.outofcore.runtime import (MemoryMeter, StreamTelemetry,
                                      WaveCheckpointer)
 from repro.outofcore.schedule import SgdEpochSchedule
@@ -67,6 +68,8 @@ def run_streaming_sgd(
     fail_after_waves: Optional[int] = None,
     mesh=None,
     callback=None,
+    tracer=None,
+    registry=None,
 ) -> tuple[FactorStore, List[dict], StreamTelemetry]:
     """Run ``cfg.epochs`` streaming SGD epochs of ``sched`` over ``tiles``.
 
@@ -74,6 +77,11 @@ def run_streaming_sgd(
     protocol as ``run_streaming_als``.  With ``ckpt_dir`` set the run
     resumes from the latest committed wave; ``factors`` seeds a warm start
     (the hybrid path) and defaults to ``sgd_init`` at the grid's shape.
+    Observability mirrors the ALS driver: the run wraps in a ``driver``
+    phase, each epoch in an ``epoch`` phase, each consumed wave in one
+    ``solve`` span, commits in ``checkpoint`` spans, and every count goes
+    through ``registry`` (created when not passed); ``tracer`` defaults to
+    the process-wide one and is a no-op unless enabled.
     With ``mesh`` set (a ``(data, model)`` mesh) each wave's tile stack is
     sharded one-tile-per-device over the joint axes before the single
     ``sgd_tiles_update`` dispatch runs, so the factor blocks live
@@ -114,8 +122,8 @@ def run_streaming_sgd(
                 if mesh is not None else jnp.asarray(stack))
 
     meter = MemoryMeter()
-    tel = StreamTelemetry(capacity_bytes=sched.capacity_bytes)
-    t_start = time.perf_counter()
+    tracer = tracer if tracer is not None else current_tracer()
+    reg = registry if registry is not None else MetricsRegistry()
 
     mgr = CheckpointManager(ckpt_dir, keep=keep) if ckpt_dir else None
     start_step = 0
@@ -125,14 +133,15 @@ def run_streaming_sgd(
              "theta": np.zeros((g * nb, f), np.float32)}, lambda: None)
         if start_step:
             factors = FactorStore.from_arrays(tree["x"], tree["theta"])
-    tel.resumed_from_step = start_step
+    reg.gauge("resumed_from_step").set(start_step)
     if factors is None:
         st = sgd_init(tiles.grid, cfg)
         factors = FactorStore.from_arrays(st.x, st.theta)
     assert factors.x.shape == (g * mb, f), (factors.x.shape, g, mb, f)
     assert factors.theta.shape == (g * nb, f), (factors.theta.shape, g, nb, f)
 
-    ckpt = WaveCheckpointer(mgr, fail_after_waves)
+    ckpt = WaveCheckpointer(mgr, fail_after_waves,
+                            tracer=tracer, registry=reg)
 
     def _save(step: int):
         # snapshot copies: the manager commits async while later waves keep
@@ -160,63 +169,82 @@ def run_streaming_sgd(
                    _place(np.stack([t[2] for t in trips])))
             return wave, dev, payload
 
-        with Prefetcher(gen(), depth=prefetch_depth, put=put) as pf:
+        with Prefetcher(gen(), depth=prefetch_depth, put=put,
+                        tracer=tracer, registry=reg) as pf:
             for wave, (idx_d, val_d, cnt_d), payload in pf:
                 t = len(wave.tiles)
-                # factor blocks: synchronous fetch AFTER the previous
-                # wave's writeback (see module doc — prefetching these
-                # across a set boundary would read stale blocks)
-                meter.alloc(f"fac_in{wave.index}", fac_bytes)
-                x_host = np.stack([
-                    factors.read_slice("x", i * mb, (i + 1) * mb)
-                    for i, _ in wave.tiles])
-                th_host = np.stack([
-                    factors.read_slice("theta", j * nb, (j + 1) * nb)
-                    for _, j in wave.tiles])
-                meter.alloc(f"fac_out{wave.index}", fac_bytes)
-                # the wave's disjoint tiles stack into one dispatch — the
-                # same sgd_tiles_update the in-core scan epoch uses, which
-                # is what keeps streaming == in-core parity exact; on a
-                # mesh the stack is sharded one tile per device, so the
-                # padded no-op tiles ride along and are discarded below
-                x_new, t_new = sgd_tiles_update(
-                    _place(x_host), _place(th_host), idx_d,
-                    val_d, cnt_d, lr_t, cfg.lam, mode=cfg.mode,
-                    row_mult=cfg.row_mult, col_mult=cfg.col_mult,
-                    f_mult=cfg.f_mult)
-                x_np, t_np = np.asarray(x_new), np.asarray(t_new)
-                for k, (i, j) in enumerate(wave.tiles):
-                    factors.write_slice("x", i * mb, (i + 1) * mb, x_np[k])
-                    factors.write_slice("theta", j * nb, (j + 1) * nb,
-                                        t_np[k])
-                meter.free(f"fac_out{wave.index}")
-                meter.free(f"fac_in{wave.index}")
-                meter.free(f"tilewave{wave.index}")
-                tel.waves_run += 1
-                tel.batches_loaded += t
-                tel.bytes_streamed += payload + x_host.nbytes + th_host.nbytes
+                with phase("sgd.wave", cat="solve", tracer=tracer,
+                           registry=reg, wave=wave.index, epoch=ep + 1,
+                           tiles=t, bytes=payload):
+                    # factor blocks: synchronous fetch AFTER the previous
+                    # wave's writeback (see module doc — prefetching these
+                    # across a set boundary would read stale blocks)
+                    meter.alloc(f"fac_in{wave.index}", fac_bytes)
+                    x_host = np.stack([
+                        factors.read_slice("x", i * mb, (i + 1) * mb)
+                        for i, _ in wave.tiles])
+                    th_host = np.stack([
+                        factors.read_slice("theta", j * nb, (j + 1) * nb)
+                        for _, j in wave.tiles])
+                    meter.alloc(f"fac_out{wave.index}", fac_bytes)
+                    # the wave's disjoint tiles stack into one dispatch —
+                    # the same sgd_tiles_update the in-core scan epoch
+                    # uses, which is what keeps streaming == in-core
+                    # parity exact; on a mesh the stack is sharded one
+                    # tile per device, so the padded no-op tiles ride
+                    # along and are discarded below
+                    x_new, t_new = sgd_tiles_update(
+                        _place(x_host), _place(th_host), idx_d,
+                        val_d, cnt_d, lr_t, cfg.lam, mode=cfg.mode,
+                        row_mult=cfg.row_mult, col_mult=cfg.col_mult,
+                        f_mult=cfg.f_mult)
+                    x_np, t_np = np.asarray(x_new), np.asarray(t_new)
+                    for k, (i, j) in enumerate(wave.tiles):
+                        factors.write_slice("x", i * mb, (i + 1) * mb,
+                                            x_np[k])
+                        factors.write_slice("theta", j * nb, (j + 1) * nb,
+                                            t_np[k])
+                    meter.free(f"fac_out{wave.index}")
+                    meter.free(f"fac_in{wave.index}")
+                    meter.free(f"tilewave{wave.index}")
+                reg.counter("waves_run").inc()
+                reg.counter("batches_loaded").inc(t)
+                reg.counter("bytes_streamed").inc(
+                    payload + x_host.nbytes + th_host.nbytes)
                 _save(ep * wpe + wave.index + 1)
 
     history: List[dict] = []
     m, n = tiles.m, tiles.n
     ep0 = start_step // wpe
-    for ep in range(ep0, cfg.epochs):
-        _epoch(ep, first_wave=start_step % wpe if ep == ep0 else 0)
-        rec = {"epoch": ep + 1, "lr": epoch_lr(cfg, ep),
-               "waves_run": tel.waves_run, "peak_bytes": meter.peak_bytes}
-        if train_eval is not None or test_eval is not None:
-            x_dev = jnp.asarray(factors.x[:m])
-            t_dev = jnp.asarray(factors.theta[:n])
-            if test_eval is not None:
-                rec["test_rmse"] = float(rmse_padded(x_dev, t_dev, *test_eval))
-            if train_eval is not None:
-                rec["train_rmse"] = float(
-                    rmse_padded(x_dev, t_dev, *train_eval))
-        history.append(rec)
-        if callback is not None:
-            callback(factors, rec)
-    if mgr is not None:
-        mgr.wait()
-    tel.peak_bytes = meter.peak_bytes
-    tel.wall_seconds = time.perf_counter() - t_start
-    return factors, history, tel
+    with phase("sgd.stream", cat="driver", tracer=tracer, registry=reg,
+               epochs=cfg.epochs, waves_per_epoch=wpe):
+        for ep in range(ep0, cfg.epochs):
+            ph0 = reg.phase_seconds()
+            with phase("sgd.epoch", cat="epoch", tracer=tracer,
+                       registry=reg, epoch=ep + 1):
+                _epoch(ep, first_wave=start_step % wpe if ep == ep0 else 0)
+            ph1 = reg.phase_seconds()
+            rec = {"epoch": ep + 1, "lr": epoch_lr(cfg, ep),
+                   "waves_run": int(reg.counter("waves_run").value),
+                   "peak_bytes": meter.peak_bytes,
+                   "phase_seconds": {
+                       cat: s - ph0.get(cat, 0.0)
+                       for cat, s in ph1.items()
+                       if s - ph0.get(cat, 0.0) > 0.0}}
+            if train_eval is not None or test_eval is not None:
+                x_dev = jnp.asarray(factors.x[:m])
+                t_dev = jnp.asarray(factors.theta[:n])
+                if test_eval is not None:
+                    rec["test_rmse"] = float(
+                        rmse_padded(x_dev, t_dev, *test_eval))
+                if train_eval is not None:
+                    rec["train_rmse"] = float(
+                        rmse_padded(x_dev, t_dev, *train_eval))
+            history.append(rec)
+            if callback is not None:
+                callback(factors, rec)
+        if mgr is not None:
+            mgr.wait()
+    reg.gauge("peak_bytes").set(meter.peak_bytes)
+    return factors, history, StreamTelemetry.from_registry(
+        reg, capacity_bytes=sched.capacity_bytes)

@@ -6,6 +6,11 @@ free slots are prefix-filled one request at a time (prefill writes that
 slot's cache rows), then all active slots decode in lockstep — the standard
 static-batch serving loop, with per-slot lengths so ragged sequences are
 handled by masking rather than padding-restarts.
+
+The batching loop is instrumented through ``repro.obs``: per-request
+prefill and per-step decode run in ``serve`` spans, an ``active_slots``
+gauge tracks occupancy, and ``serve/tokens_decoded`` counts throughput —
+enough to see admission stalls vs decode time in a trace.
 """
 from __future__ import annotations
 
@@ -19,6 +24,7 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.models import lm as lm_mod
 from repro.models import transformer as T
+from repro.obs.trace import current_tracer, phase
 
 
 @dataclasses.dataclass
@@ -32,12 +38,15 @@ class Request:
 
 class ServeEngine:
     def __init__(self, cfg: ModelConfig, params, *, n_slots: int = 4,
-                 max_seq: int = 512, mesh=None, serve_seq_shard=False):
+                 max_seq: int = 512, mesh=None, serve_seq_shard=False,
+                 tracer=None, registry=None):
         self.cfg = cfg
         self.params = params
         self.n_slots = n_slots
         self.max_seq = max_seq
         self.mesh = mesh
+        self.tracer = tracer if tracer is not None else current_tracer()
+        self.registry = registry
         self.cache = T.init_cache(cfg, n_slots, max_seq, jnp.float32)
         self.lengths = jnp.zeros((n_slots,), jnp.int32)
         self.slot_req: List[Optional[Request]] = [None] * n_slots
@@ -58,24 +67,34 @@ class ServeEngine:
             if self.slot_req[slot] is None and self.pending:
                 req = self.pending.pop(0)
                 self.slot_req[slot] = req
-                for t in np.asarray(req.prompt, np.int32):
-                    tok = self.last_tok.at[slot].set(int(t))
-                    nxt, self.cache, lens = self._decode(
-                        self.params, self.cache, tok, self.lengths)
-                    self.lengths = self.lengths.at[slot].set(
-                        int(self.lengths[slot]) + 1)
-                    self.last_tok = self.last_tok.at[slot].set(
-                        int(np.asarray(nxt)[slot]))
+                with phase("serve.prefill", cat="serve",
+                           tracer=self.tracer, registry=self.registry,
+                           rid=req.rid, slot=slot,
+                           prompt_len=len(req.prompt)):
+                    for t in np.asarray(req.prompt, np.int32):
+                        tok = self.last_tok.at[slot].set(int(t))
+                        nxt, self.cache, lens = self._decode(
+                            self.params, self.cache, tok, self.lengths)
+                        self.lengths = self.lengths.at[slot].set(
+                            int(self.lengths[slot]) + 1)
+                        self.last_tok = self.last_tok.at[slot].set(
+                            int(np.asarray(nxt)[slot]))
 
     def step(self):
         """One decode step for all active slots; retire finished requests."""
         self._admit()
         active = [s for s, r in enumerate(self.slot_req) if r is not None]
+        if self.registry is not None:
+            self.registry.gauge("active_slots").set(len(active))
         if not active:
             return False
-        nxt, self.cache, self.lengths = self._decode(
-            self.params, self.cache, self.last_tok, self.lengths)
-        nxt_np = np.asarray(nxt)
+        with phase("serve.decode_step", cat="serve", tracer=self.tracer,
+                   registry=self.registry, active=len(active)):
+            nxt, self.cache, self.lengths = self._decode(
+                self.params, self.cache, self.last_tok, self.lengths)
+            nxt_np = np.asarray(nxt)
+        if self.registry is not None:
+            self.registry.counter("serve/tokens_decoded").inc(len(active))
         for s in active:
             req = self.slot_req[s]
             req.out.append(int(nxt_np[s]))

@@ -110,9 +110,14 @@ def run_streaming_hybrid(
 
     Both phases run through the shared wave runtime under their own
     schedules' budgets; ``ratings`` and ``tiles`` are two host-resident
-    layouts of the same rating matrix.  Returns
-    ``(FactorStore, history, (als_telemetry, sgd_telemetry))`` with history
-    records phase-tagged like ``hybrid_train``'s.  Checkpoints are
+    layouts of the same rating matrix.  Returns ``(FactorStore, history,
+    StreamTelemetry)`` — ONE merged telemetry over both phases
+    (``outofcore.runtime.merge_telemetry``): traffic and wall time summed,
+    capacity/peak the per-phase maxima, ``phase_seconds`` keys prefixed
+    ``als/`` / ``sgd/``, and the individual phase telemetries still
+    reachable under ``.phases["als"]`` / ``.phases["sgd"]`` (``"als"``
+    absent when the warm start was skipped on resume).  History records
+    are phase-tagged like ``hybrid_train``'s.  Checkpoints are
     phase-scoped (``<ckpt_dir>/als`` and ``<ckpt_dir>/sgd`` hold
     differently-shaped trees); once the SGD phase has committed a wave, a
     restart skips the warm start entirely — the SGD checkpoint already
@@ -122,6 +127,7 @@ def run_streaming_hybrid(
     # module-level import back into repro.sgd would be circular
     from repro.outofcore import (FactorStore, run_streaming_als,
                                  run_streaming_sgd)
+    from repro.outofcore.runtime import merge_telemetry
 
     grid = tiles.grid
     assert grid.m == ratings.m and grid.n == ratings.n, \
@@ -165,4 +171,5 @@ def run_streaming_hybrid(
         tiles, sgd_sched, sgd_cfg, factors=warm, ckpt_dir=sgd_ck, keep=keep,
         prefetch_depth=prefetch_depth, test_eval=test_eval,
         train_eval=train_eval, mesh=mesh, callback=tagged("sgd"))
-    return final, als_hist + sgd_hist, (als_tel, sgd_tel)
+    tel = merge_telemetry({"als": als_tel, "sgd": sgd_tel})
+    return final, als_hist + sgd_hist, tel

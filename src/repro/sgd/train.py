@@ -30,6 +30,7 @@ import numpy as np
 
 from repro.core.objective import rmse_padded
 from repro.kernels.sgd_update import sgd_block_update
+from repro.obs.trace import current_tracer, phase
 from repro.sgd.blocking import BlockGrid
 from repro.training.optimizer import lr_schedule
 
@@ -176,6 +177,8 @@ def sgd_train(
     init_state: Optional[SgdState] = None,
     ckpt_dir: Optional[str] = None,
     callback=None,
+    tracer=None,
+    registry=None,
 ) -> tuple[SgdState, list[dict]]:
     """Epoch loop with lr schedule, RMSE tracking, and checkpoint/resume.
 
@@ -184,7 +187,12 @@ def sgd_train(
     the padded factors back to the true (m, n).  With ``ckpt_dir`` the
     driver restores the latest epoch on entry and saves after every epoch
     (async, paper §4.4 protocol), so a killed run resumes bit-exact.
+
+    Each epoch runs in an ``epoch`` obs span (plus a ``checkpoint`` span
+    per commit); ``tracer`` defaults to the process-wide tracer and the
+    spans are no-ops unless one is enabled.
     """
+    tracer = tracer if tracer is not None else current_tracer()
     state = sgd_init(grid, cfg) if init_state is None else init_state
     start = int(state.epoch)
     mgr = None
@@ -203,8 +211,12 @@ def sgd_train(
     history: list[dict] = []
     for ep in range(start, cfg.epochs):
         lr = epoch_lr(cfg, ep)
-        state = sgd_epoch(state, gt, grid, cfg, lr,
-                          set_order=epoch_set_order(cfg.seed, ep, grid.g))
+        with phase("sgd.epoch", cat="epoch", tracer=tracer,
+                   registry=registry, epoch=ep + 1, lr=lr):
+            state = sgd_epoch(state, gt, grid, cfg, lr,
+                              set_order=epoch_set_order(cfg.seed, ep,
+                                                        grid.g))
+            jax.block_until_ready(state.x)
         rec = {"epoch": ep + 1, "lr": lr}
         x, th = state.x[:m], state.theta[:n]
         if test is not None:
@@ -217,8 +229,10 @@ def sgd_train(
             # on a background thread, and a donated/in-place update of
             # state.x would race the writer (outofcore/driver.py snapshots
             # the same way)
-            mgr.save(ep + 1, {"x": np.array(state.x),
-                              "theta": np.array(state.theta)})
+            with phase("checkpoint.commit", cat="checkpoint",
+                       tracer=tracer, registry=registry, step=ep + 1):
+                mgr.save(ep + 1, {"x": np.array(state.x),
+                                  "theta": np.array(state.theta)})
         if callback is not None:
             callback(state, rec)
     if mgr is not None:

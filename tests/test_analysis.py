@@ -18,6 +18,7 @@ from repro.analysis.engine import (AnalysisConfig, Baseline, Finding,
 from repro.analysis.rules import ALL_RULES, get_rules, rule_names
 from repro.analysis.rules.checkpoint_aliasing import CheckpointAliasingRule
 from repro.analysis.rules.compat_routing import CompatRoutingRule
+from repro.analysis.rules.obs_routing import ObsRoutingRule
 from repro.analysis.rules.pallas_budget import PallasBudgetRule
 from repro.analysis.rules.precision_drift import PrecisionDriftRule
 from repro.analysis.rules.shard_safety import ShardSafetyRule
@@ -89,6 +90,69 @@ class TestCompatRouting:
         found = run_rule(tmp_path, CompatRoutingRule(), """
             from jax.experimental.shard_map import shard_map
         """, rel="src/repro/compat.py")
+        assert found == []
+
+
+# ---------------------------------------------------------------------------
+# obs-routing (ISSUE 7 satellite): bare clocks in src/repro/ outside obs/
+# ---------------------------------------------------------------------------
+
+class TestObsRouting:
+    def test_flags_bare_perf_counter_and_time(self, tmp_path):
+        found = run_rule(tmp_path, ObsRoutingRule(), """
+            import time
+
+            def slow_path():
+                t0 = time.perf_counter()
+                t1 = time.time()
+                return t1 - t0
+        """, rel="src/repro/outofcore/driver.py")
+        assert len(found) == 2
+        assert all(f.rule == "obs-routing" for f in found)
+        msgs = "\n".join(f.message for f in found)
+        assert "time.perf_counter" in msgs and "time.time" in msgs
+
+    def test_flags_from_import_and_aliases(self, tmp_path):
+        found = run_rule(tmp_path, ObsRoutingRule(), """
+            import time as clock
+            from time import perf_counter as pc
+
+            def f():
+                return clock.monotonic() + pc()
+        """, rel="src/repro/sgd/train.py")
+        assert len(found) == 2
+
+    def test_obs_layer_itself_is_excluded(self, tmp_path):
+        found = run_rule(tmp_path, ObsRoutingRule(), """
+            import time
+
+            def now():
+                return time.perf_counter()
+        """, rel="src/repro/obs/trace.py")
+        assert found == []
+
+    def test_phase_spelling_is_clean(self, tmp_path):
+        found = run_rule(tmp_path, ObsRoutingRule(), """
+            from repro.obs.trace import phase
+
+            def wave(reg, tracer):
+                with phase("als.wave_x", cat="solve", tracer=tracer,
+                           registry=reg):
+                    pass
+            # non-clock time attrs don't trip the rule
+            def fmt(t):
+                import time
+                return time.strftime("%H:%M", t)
+        """, rel="src/repro/outofcore/driver.py")
+        assert found == []
+
+    def test_suppression_comment_works(self, tmp_path):
+        found = run_rule(tmp_path, ObsRoutingRule(), """
+            import time
+
+            def probe():
+                return time.time()  # reprolint: disable=obs-routing
+        """, rel="src/repro/launch/dryrun.py")
         assert found == []
 
 
@@ -459,9 +523,10 @@ class TestEngine:
 class TestCLI:
     def test_rule_catalog_is_complete(self):
         assert sorted(rule_names()) == ["checkpoint-aliasing",
-                                        "compat-routing", "pallas-budget",
-                                        "precision-drift", "shard-safety"]
-        assert len(ALL_RULES) == 5
+                                        "compat-routing", "obs-routing",
+                                        "pallas-budget", "precision-drift",
+                                        "shard-safety"]
+        assert len(ALL_RULES) == 6
 
     def test_get_rules_unknown_name_fails_loudly(self):
         with pytest.raises(ValueError, match="unknown rule name"):

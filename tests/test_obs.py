@@ -1,0 +1,349 @@
+"""Observability layer tests (ISSUE 7): tracer semantics, export schema,
+metrics, and the streaming-driver span contract.
+
+The layer's two promises are covered head-on: (a) the exported file is a
+valid Chrome-trace object Perfetto loads — required keys, non-negative
+microsecond times, per-thread *nested* spans, named thread tracks; (b)
+with no tracer installed the instrumentation is a no-op — the default
+``current_tracer()`` hands out one shared constant span and records
+nothing.  The streaming regression at the end pins the cross-layer
+contract the docs advertise: one ``solve`` span per consumed wave, so
+``count(cat="solve") == StreamTelemetry.waves_run``.
+"""
+import json
+import threading
+
+import pytest
+
+from repro.obs import (DEFAULT_LATENCY_BUCKETS, Histogram, MetricsRegistry,
+                       NOOP_SPAN, Tracer, chrome_trace, current_tracer,
+                       load_and_validate, set_tracer, span_counts,
+                       validate_chrome_trace, write_trace)
+from repro.obs.trace import NULL_TRACER, phase
+
+
+@pytest.fixture(autouse=True)
+def _restore_process_tracer():
+    """Never leak a test's tracer into the rest of the suite."""
+    prev = current_tracer()
+    yield
+    set_tracer(prev)
+
+
+# ---------------------------------------------------------------------------
+# tracer semantics
+# ---------------------------------------------------------------------------
+
+class TestTracer:
+    def test_span_records_category_args_and_duration(self):
+        tr = Tracer()
+        with tr.span("work", cat="solve", wave=3):
+            pass
+        (ev,) = tr.events
+        assert ev.name == "work" and ev.cat == "solve"
+        assert ev.args == {"wave": 3}
+        assert ev.ts >= 0 and ev.dur >= 0
+
+    def test_nested_spans_nest_in_time(self):
+        tr = Tracer()
+        with tr.span("outer", cat="half"):
+            with tr.span("inner", cat="solve"):
+                pass
+        inner, outer = tr.spans()   # recorded at exit: inner closes first
+        assert inner.name == "inner" and outer.name == "outer"
+        assert outer.ts <= inner.ts
+        assert inner.ts + inner.dur <= outer.ts + outer.dur + 1e-6
+
+    def test_spans_filter_by_category(self):
+        tr = Tracer()
+        with tr.span("a", cat="solve"):
+            pass
+        with tr.span("b", cat="reduce"):
+            pass
+        assert [e.name for e in tr.spans(cat="solve")] == ["a"]
+
+    def test_thread_names_are_captured(self):
+        tr = Tracer()
+
+        def work():
+            with tr.span("w", cat="prefetch_load"):
+                pass
+
+        t = threading.Thread(target=work, name="prefetch-worker")
+        t.start()
+        t.join()
+        with tr.span("m", cat="solve"):
+            pass
+        assert "prefetch-worker" in tr.thread_names.values()
+        tids = {e.tid for e in tr.events}
+        assert len(tids) == 2
+
+    def test_disabled_tracer_is_shared_noop(self):
+        # the default process tracer records nothing and allocates nothing:
+        # every span() call returns the one module-level constant
+        assert current_tracer() is NULL_TRACER
+        s1 = NULL_TRACER.span("x", cat="solve", big_arg=list(range(100)))
+        s2 = NULL_TRACER.span("y", cat="reduce")
+        assert s1 is s2 is NOOP_SPAN
+        with s1:
+            pass
+        assert NULL_TRACER.spans() == []
+
+    def test_set_tracer_installs_and_returns_previous(self):
+        tr = Tracer()
+        prev = set_tracer(tr)
+        assert prev is NULL_TRACER
+        assert current_tracer() is tr
+        assert set_tracer(None) is tr           # None -> back to null
+        assert current_tracer() is NULL_TRACER
+
+
+class TestPhase:
+    def test_phase_feeds_registry_and_tracer(self):
+        tr, reg = Tracer(), MetricsRegistry()
+        with phase("als.wave_x", cat="solve", tracer=tr, registry=reg,
+                   wave=0):
+            pass
+        assert len(tr.spans(cat="solve")) == 1
+        assert reg.counter("phase_seconds/solve").value > 0
+        assert reg.histogram("solve_seconds").count == 1
+
+    def test_phase_with_null_tracer_still_meters(self):
+        reg = MetricsRegistry()
+        with phase("x", cat="half", tracer=NULL_TRACER, registry=reg):
+            pass
+        assert reg.phase_seconds().keys() == {"half"}
+
+    def test_phase_propagates_exceptions_but_records(self):
+        tr, reg = Tracer(), MetricsRegistry()
+        with pytest.raises(RuntimeError):
+            with phase("boom", cat="solve", tracer=tr, registry=reg):
+                raise RuntimeError("boom")
+        assert len(tr.spans(cat="solve")) == 1
+        assert reg.histogram("solve_seconds").count == 1
+
+
+# ---------------------------------------------------------------------------
+# metrics registry
+# ---------------------------------------------------------------------------
+
+class TestMetrics:
+    def test_counter_gauge_roundtrip(self):
+        reg = MetricsRegistry()
+        reg.counter("waves_run").inc()
+        reg.counter("waves_run").inc(2)
+        reg.gauge("peak_bytes").set(10)
+        reg.gauge("peak_bytes").set(4)
+        assert reg.counter("waves_run").value == 3
+        assert reg.gauge("peak_bytes").value == 4
+        assert reg.gauge("peak_bytes").max == 10
+
+    def test_histogram_bucket_edges_are_le_inclusive(self):
+        h = Histogram(edges=(0.1, 1.0, 10.0))
+        # exactly on an edge lands in that edge's bucket (le semantics)
+        for v in (0.05, 0.1):
+            h.observe(v)
+        h.observe(1.0)
+        h.observe(5.0)
+        h.observe(100.0)        # beyond the last edge -> overflow bucket
+        assert h.counts == [2, 1, 1, 1]
+        assert h.count == 5
+        assert h.mean == pytest.approx((0.05 + 0.1 + 1.0 + 5.0 + 100.0) / 5)
+
+    def test_histogram_rejects_unsorted_edges(self):
+        with pytest.raises(AssertionError):
+            Histogram(edges=(1.0, 0.5))
+        with pytest.raises(AssertionError):
+            Histogram(edges=(1.0, 1.0))
+
+    def test_default_buckets_cover_smoke_and_scale(self):
+        assert DEFAULT_LATENCY_BUCKETS[0] <= 0.001
+        assert DEFAULT_LATENCY_BUCKETS[-1] >= 100.0
+
+    def test_snapshot_is_json_ready(self):
+        reg = MetricsRegistry()
+        reg.counter("bytes_streamed").inc(42)
+        reg.gauge("peak_bytes").set(7)
+        reg.histogram("solve_seconds").observe(0.5)
+        snap = json.loads(json.dumps(reg.snapshot()))
+        assert snap["counters"]["bytes_streamed"] == 42
+        assert snap["gauges"]["peak_bytes"]["value"] == 7
+        assert snap["histograms"]["solve_seconds"]["count"] == 1
+
+
+# ---------------------------------------------------------------------------
+# Chrome-trace export schema
+# ---------------------------------------------------------------------------
+
+class TestExport:
+    def _traced_run(self):
+        tr, reg = Tracer(), MetricsRegistry()
+        with phase("driver", cat="driver", tracer=tr, registry=reg):
+            for w in range(3):
+                with phase("wave", cat="solve", tracer=tr, registry=reg,
+                           wave=w):
+                    pass
+        tr.instant("resume", cat="driver", step=4)
+        tr.counter("queue_depth", 2)
+        return tr, reg
+
+    def test_round_trip_validates(self, tmp_path):
+        tr, reg = self._traced_run()
+        path = str(tmp_path / "trace.json")
+        write_trace(path, tr, registry=reg)
+        stats = load_and_validate(path)
+        assert stats["spans"] == 4                  # driver + 3 waves
+        assert set(stats["cats"]) >= {"driver", "solve"}
+        # the file is the object flavor both Perfetto and chrome load
+        obj = json.loads(open(path).read())
+        assert isinstance(obj["traceEvents"], list)
+        assert obj["displayTimeUnit"] == "ms"
+        # the registry snapshot rides along in otherData
+        counters = obj["otherData"]["metrics"]["counters"]
+        assert counters["phase_seconds/solve"] > 0
+        names = {e["name"] for e in obj["traceEvents"]}
+        assert {"process_name", "thread_name"} <= names
+
+    def test_span_nesting_is_monotonic_per_thread(self):
+        tr, _ = self._traced_run()
+        obj = chrome_trace(tr)
+        stats = validate_chrome_trace(obj)
+        # every span sits on the recording thread's track
+        assert len(stats["tids"]) == 1
+
+    def test_validator_rejects_partial_overlap(self):
+        obj = {"traceEvents": [
+            {"name": "a", "ph": "X", "pid": 1, "tid": 1, "ts": 0,
+             "dur": 10},
+            {"name": "b", "ph": "X", "pid": 1, "tid": 1, "ts": 5,
+             "dur": 10},
+        ]}
+        with pytest.raises(ValueError, match="partially overlaps"):
+            validate_chrome_trace(obj)
+
+    def test_validator_rejects_missing_keys(self):
+        with pytest.raises(ValueError, match="traceEvents"):
+            validate_chrome_trace({"events": []})
+        with pytest.raises(ValueError, match="missing 'ts'"):
+            validate_chrome_trace({"traceEvents": [
+                {"name": "a", "ph": "X", "pid": 1, "tid": 1, "dur": 1}]})
+        with pytest.raises(ValueError, match="'dur'"):
+            validate_chrome_trace({"traceEvents": [
+                {"name": "a", "ph": "X", "pid": 1, "tid": 1, "ts": 1}]})
+
+    def test_span_counts_by_cat_and_name(self):
+        tr, _ = self._traced_run()
+        obj = chrome_trace(tr)
+        assert span_counts(obj)["solve"] == 3
+        assert span_counts(obj, by="name")["wave"] == 3
+
+    def test_worker_thread_gets_its_own_named_track(self):
+        tr = Tracer()
+
+        def load():
+            with tr.span("load", cat="prefetch_load"):
+                pass
+
+        t = threading.Thread(target=load, name="prefetch-worker")
+        t.start()
+        t.join()
+        with tr.span("solve", cat="solve"):
+            pass
+        obj = chrome_trace(tr)
+        meta = {e["args"]["name"] for e in obj["traceEvents"]
+                if e["ph"] == "M" and e["name"] == "thread_name"}
+        assert "prefetch-worker" in meta
+        assert len(validate_chrome_trace(obj)["tids"]) == 2
+
+
+# ---------------------------------------------------------------------------
+# streaming-driver regression: spans match telemetry
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+class TestStreamingSpans:
+    def test_streaming_als_solve_spans_equal_waves_run(self):
+        from repro.core import als as als_mod
+        from repro.core.partition import plan_for
+        from repro.outofcore import (RatingStore, build_schedule,
+                                     run_streaming_als)
+        from repro.sparse import synth
+
+        spec = synth.SynthSpec("obs-oc", 96, 40, 1500, 8, 0.05)
+        r, _, _, _ = synth.make_synthetic_ratings(spec, seed=0)
+        store = RatingStore(r, q=4)
+        acc_eps = spec.n * (spec.f * spec.f + 3 * spec.f + 1) * 4
+        plan = plan_for(spec.m, spec.n, r.nnz, spec.f, p=1, q=4, n_data=2,
+                        fill=store.worst_fill, eps=acc_eps, buffers=4,
+                        hbm_bytes=1 << 22)
+        sched = build_schedule(plan, spec.m, spec.n, n_data=2)
+        assert len(sched.waves) >= 2
+        cfg = als_mod.AlsConfig(f=spec.f, lam=spec.lam, iters=2, mode="ref")
+
+        tr, reg = Tracer(), MetricsRegistry()
+        _, hist, tel = run_streaming_als(store, sched, cfg, tracer=tr,
+                                         registry=reg)
+
+        # THE span contract: one cat="solve" span per consumed wave
+        assert len(tr.spans(cat="solve")) == tel.waves_run
+        assert tel.waves_run == 2 * cfg.iters * len(sched.waves)
+        # structural spans: one driver, per-iteration + two halves each
+        assert len(tr.spans(cat="driver")) == 1
+        assert len(tr.spans(cat="iteration")) == cfg.iters
+        assert len(tr.spans(cat="half")) == 2 * cfg.iters
+        # telemetry is the registry view; wall time is the driver phase
+        assert tel.wall_seconds == reg.phase_seconds()["driver"]
+        assert tel.wall_seconds > 0
+        assert set(tel.phase_seconds) >= {"driver", "iteration", "half",
+                                          "solve", "prefetch"}
+        # per-iteration breakdowns ride in history
+        assert all("phase_seconds" in rec for rec in hist)
+        assert all(rec["phase_seconds"].get("solve", 0) > 0 for rec in hist)
+        # the whole run exports as a valid Chrome trace with the same count
+        obj = chrome_trace(tr, registry=reg)
+        stats = validate_chrome_trace(obj)
+        assert span_counts(obj)["solve"] == tel.waves_run
+        assert len(stats["tids"]) >= 2      # prefetch worker tracks exist
+
+    def test_streaming_sgd_solve_spans_equal_waves_run(self):
+        from repro.outofcore import (TileStore, build_sgd_schedule,
+                                     run_streaming_sgd)
+        from repro.sgd import SgdConfig, block_ell
+        from repro.sparse import synth
+
+        spec = synth.SynthSpec("obs-sgd", 96, 40, 1500, 8, 0.05)
+        r, _, _, _ = synth.make_synthetic_ratings(spec, seed=0)
+        grid = block_ell(r, g=4)
+        sched = build_sgd_schedule(grid, spec.f, n_workers=2)
+        cfg = SgdConfig(f=spec.f, lam=spec.lam, lr=0.1, epochs=2,
+                        mode="ref", seed=1)
+
+        tr, reg = Tracer(), MetricsRegistry()
+        _, hist, tel = run_streaming_sgd(TileStore(grid), sched, cfg,
+                                         tracer=tr, registry=reg)
+        assert len(tr.spans(cat="solve")) == tel.waves_run
+        assert tel.waves_run == cfg.epochs * sched.waves_per_epoch
+        assert len(tr.spans(cat="epoch")) == cfg.epochs
+        assert tel.wall_seconds > 0
+        assert all(rec["phase_seconds"].get("solve", 0) > 0 for rec in hist)
+        validate_chrome_trace(chrome_trace(tr, registry=reg))
+
+    def test_untraced_run_still_reports_telemetry(self):
+        """Tracing off (the default): no spans exist anywhere, but the
+        always-on registry still yields full telemetry."""
+        from repro.outofcore import (TileStore, build_sgd_schedule,
+                                     run_streaming_sgd)
+        from repro.sgd import SgdConfig, block_ell
+        from repro.sparse import synth
+
+        spec = synth.SynthSpec("obs-off", 96, 40, 1500, 8, 0.05)
+        r, _, _, _ = synth.make_synthetic_ratings(spec, seed=0)
+        grid = block_ell(r, g=4)
+        sched = build_sgd_schedule(grid, spec.f, n_workers=2)
+        cfg = SgdConfig(f=spec.f, lam=spec.lam, lr=0.1, epochs=1,
+                        mode="ref", seed=1)
+        assert current_tracer() is NULL_TRACER
+        _, _, tel = run_streaming_sgd(TileStore(grid), sched, cfg)
+        assert tel.waves_run == sched.waves_per_epoch
+        assert tel.wall_seconds > 0
+        assert tel.phase_seconds["solve"] > 0

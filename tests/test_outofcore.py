@@ -333,18 +333,27 @@ def test_streaming_hybrid_runs_both_phases_streamed(tmp_path):
     cfg = _sgd_cfg(epochs=2)
 
     ck = str(tmp_path / "hyb")
-    fac, hist, (atel, stel) = run_streaming_hybrid(
+    fac, hist, tel = run_streaming_hybrid(
         store, als_sched, tiles, sched, als_cfg, cfg, test_eval=rtest,
         ckpt_dir=ck)
     assert [h["phase"] for h in hist] == ["als"] * 2 + ["sgd"] * 2
     # warm start pays off: first SGD epoch starts below the cold ALS start
     assert hist[2]["test_rmse"] < hist[0]["test_rmse"]
+    # ONE merged telemetry (ISSUE 7 satellite): the per-phase views stay
+    # reachable and each ran within its own budget
+    atel, stel = tel.phases["als"], tel.phases["sgd"]
     assert atel.peak_bytes <= atel.capacity_bytes
     assert stel.peak_bytes <= stel.capacity_bytes
-    fac2, hist2, (atel2, _) = run_streaming_hybrid(
+    assert tel.waves_run == atel.waves_run + stel.waves_run
+    assert tel.peak_bytes == max(atel.peak_bytes, stel.peak_bytes)
+    assert tel.wall_seconds >= max(atel.wall_seconds, stel.wall_seconds)
+    assert any(k.startswith("als/") for k in tel.phase_seconds)
+    assert any(k.startswith("sgd/") for k in tel.phase_seconds)
+    fac2, hist2, tel2 = run_streaming_hybrid(
         store, als_sched, tiles, sched, als_cfg, cfg, test_eval=rtest,
         ckpt_dir=ck)
-    assert hist2 == [] and atel2 is None   # complete: no ALS re-run
+    # complete: no ALS re-run, so the merged view has no ALS phase
+    assert hist2 == [] and "als" not in tel2.phases
     np.testing.assert_array_equal(fac2.x, fac.x)
     np.testing.assert_array_equal(fac2.theta, fac.theta)
 
