@@ -19,6 +19,22 @@ from repro.sparse.synth import DATASETS
 from benchmarks.common import emit
 
 JSON_OUT = "BENCH_outofcore.json"   # run.py serializes run()'s records here
+LEDGER_OUT = "LEDGER_outofcore.json"  # plan-vs-actual ledger of the last run
+
+
+def _write_ledger(tel) -> None:
+    """Serialize the run's plan-vs-actual ledger next to the BENCH rows.
+    Each streaming run overwrites it, so the file ends up holding the mesh
+    run's ledger when the mesh ran and the last single-device run's
+    otherwise — CI schema-checks and gates it with ``repro.obs.regress``."""
+    import json
+
+    if tel.ledger:
+        with open(LEDGER_OUT, "w") as f:
+            json.dump(tel.ledger, f, indent=2)
+        emit("outofcore_ledger", 0.0,
+             f"wrote {len(tel.ledger['records'])} plan-vs-actual records "
+             f"to {LEDGER_OUT};ok={tel.ledger['ok']}")
 
 V5E_CHIP_HR_USD = 1.20      # on-demand list-ish price per chip-hour
 PAPER_BASELINES = {         # per-iteration seconds + cluster cost, Table 1/§5.5
@@ -88,8 +104,13 @@ def measure_outofcore(iters: int = 2, seed: int = 0,
             "required_capacity_bytes": required_capacity_bytes(
                 store, sched, spec.f),
             "fits": tel.peak_bytes <= tel.capacity_bytes,
+            "padded_slots": tel.padded_slots,
+            "nnz_streamed": tel.nnz_streamed,
+            "fill_waste_ratio": round(tel.fill_waste_ratio, 6),
+            "ledger_ok": tel.ledger.get("ok", False),
         }
         records.append(rec)
+        _write_ledger(tel)
         emit(rec["name"], iter_s * 1e6,
              f"measured;waves={rec['waves']};peak_MiB="
              f"{tel.peak_bytes / 2**20:.1f};cap_MiB="
@@ -150,7 +171,12 @@ def measure_outofcore_mesh(iters: int = 2, seed: int = 0) -> list[dict]:
         "reduce_fast_bytes": tel.reduce_fast_bytes,
         "reduce_slow_bytes": tel.reduce_slow_bytes,
         "topology": tel.topology,
+        "padded_slots": tel.padded_slots,
+        "nnz_streamed": tel.nnz_streamed,
+        "fill_waste_ratio": round(tel.fill_waste_ratio, 6),
+        "ledger_ok": tel.ledger.get("ok", False),
     }
+    _write_ledger(tel)
     emit(rec["name"], iter_s * 1e6,
          f"measured;mesh=data{n_data}xmodel{p};peak_MiB="
          f"{tel.peak_bytes / 2**20:.1f};cap_MiB="

@@ -98,6 +98,9 @@ def run(quick: bool = False):
                  capacity_bytes=tel.capacity_bytes,
                  peak_bytes=tel.peak_bytes,
                  bytes_streamed=tel.bytes_streamed,
+                 padded_slots=tel.padded_slots,
+                 nnz_streamed=tel.nnz_streamed,
+                 fill_waste_ratio=round(tel.fill_waste_ratio, 6),
                  wall_seconds=tel.wall_seconds,
                  phase_seconds={k: round(v, 4)
                                 for k, v in tel.phase_seconds.items()})
@@ -120,6 +123,9 @@ def run(quick: bool = False):
                       capacity_bytes=mtel.capacity_bytes,
                       peak_bytes=mtel.peak_bytes,
                       bytes_streamed=mtel.bytes_streamed,
+                      padded_slots=mtel.padded_slots,
+                      nnz_streamed=mtel.nnz_streamed,
+                      fill_waste_ratio=round(mtel.fill_waste_ratio, 6),
                       wall_seconds=mtel.wall_seconds,
                       phase_seconds={k: round(v, 4)
                                      for k, v in mtel.phase_seconds.items()})

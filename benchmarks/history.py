@@ -1,0 +1,76 @@
+"""Bench history: append every emission to a provenance-stamped JSONL.
+
+``benchmarks/run.py`` calls :func:`append_history` for every module whose
+``run()`` returned JSON records, so ``BENCH_HISTORY.jsonl`` accumulates one
+line per (bench, run) with enough provenance to compare like with like::
+
+    {"schema": "repro.obs/bench-history-v1",
+     "provenance": {"git_sha": ..., "timestamp": ..., "backend": ...,
+                    "device_count": ..., "jax": ..., "quick": ...},
+     "bench": "bench_huge", "records": [...]}
+
+``python -m repro.obs.regress --history BENCH_HISTORY.jsonl`` is the
+consumer: newest entry vs a rolling baseline of prior entries with the
+same (bench, quick, backend, device_count) configuration — deterministic
+byte/count metrics exact, time metrics warn-only.  CI's bench-smoke lane
+caches the file across runs so the baseline is real lineage, not a
+same-run echo.
+
+The same provenance dict is also stamped INTO each emitted JSON record
+(``record["provenance"]``) so a BENCH_*.json file downloaded as an
+artifact is self-describing without its history line.
+"""
+from __future__ import annotations
+
+import datetime
+import json
+import os
+import subprocess
+
+HISTORY_SCHEMA = "repro.obs/bench-history-v1"   # mirror of repro.obs.regress
+
+
+def provenance(quick: bool = False) -> dict:
+    """Where/when/what of this bench process.  Every field degrades to a
+    sentinel rather than raising — benches must run in a bare checkout
+    (no git) and in environments where jax fails to initialize."""
+    here = os.path.dirname(os.path.abspath(__file__))
+    try:
+        sha = subprocess.run(
+            ["git", "rev-parse", "HEAD"], cwd=here, capture_output=True,
+            text=True, timeout=10).stdout.strip() or "unknown"
+    except OSError:
+        sha = "unknown"
+    prov = {
+        "git_sha": sha,
+        "timestamp": datetime.datetime.now(
+            datetime.timezone.utc).isoformat(timespec="seconds"),
+        "quick": bool(quick),
+        "backend": "unknown",
+        "device_count": 0,
+        "jax": "unknown",
+    }
+    try:
+        import jax
+        prov["backend"] = jax.default_backend()
+        prov["device_count"] = len(jax.devices())
+        prov["jax"] = jax.__version__
+    except Exception:
+        pass
+    return prov
+
+
+def stamp(records: list[dict], prov: dict) -> list[dict]:
+    """Attach the provenance dict to every emitted JSON record, in place."""
+    for rec in records:
+        rec["provenance"] = prov
+    return records
+
+
+def append_history(path: str, bench: str, records: list[dict],
+                   prov: dict) -> None:
+    """Append one history line for ``bench``'s emission."""
+    entry = {"schema": HISTORY_SCHEMA, "provenance": prov,
+             "bench": bench, "records": records}
+    with open(path, "a") as f:
+        f.write(json.dumps(entry, sort_keys=True) + "\n")

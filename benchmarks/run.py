@@ -60,6 +60,13 @@ def main(argv=None) -> None:
     ap.add_argument("--trace", default=None, metavar="OUT.json",
                     help="record obs spans across every selected benchmark "
                          "and write one Chrome-trace/Perfetto JSON file")
+    ap.add_argument("--history", default="BENCH_HISTORY.jsonl",
+                    metavar="JSONL",
+                    help="append every JSON emission here with provenance "
+                         "(git sha, backend, device count, quick flag); "
+                         "gate with `python -m repro.obs.regress --history`")
+    ap.add_argument("--no-history", action="store_true",
+                    help="skip the history append (one-off local runs)")
     args = ap.parse_args(argv)
 
     known = {n for n, _ in MODULES}
@@ -80,6 +87,9 @@ def main(argv=None) -> None:
         tracer = Tracer()
         set_tracer(tracer)      # streaming drivers pick it up themselves
 
+    from benchmarks.history import append_history, provenance, stamp
+    prov = provenance(quick=args.quick)
+
     print("name,us_per_call,derived")
     try:
         for name, modname in MODULES:
@@ -92,9 +102,14 @@ def main(argv=None) -> None:
             out = mod.run(**kwargs)
             json_out = getattr(mod, "JSON_OUT", None)
             if json_out and out:
+                stamp(out, prov)
                 with open(json_out, "w") as f:
                     json.dump(out, f, indent=2)
                 print(f"# wrote {len(out)} records to {json_out}", flush=True)
+                if not args.no_history:
+                    append_history(args.history, modname, out, prov)
+                    print(f"# history: {modname} -> {args.history}",
+                          flush=True)
     finally:
         if tracer is not None:
             from repro.obs import write_trace

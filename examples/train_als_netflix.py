@@ -178,6 +178,23 @@ def _tel_summary(tel, ckpt):
             f"waves; checkpoints in {ckpt}")
 
 
+def _emit_ledger(tel, args):
+    """--ledger OUT.json: serialize the run's plan-vs-actual ledger and
+    print the rendered report (the same text `python -m repro.obs.report`
+    produces from the file)."""
+    if not getattr(args, "ledger", None):
+        return
+    import json
+
+    from repro.obs.report import render_ledger
+
+    with open(args.ledger, "w") as f:
+        json.dump(tel.ledger, f, indent=2)
+    print(f"ledger: {len(tel.ledger['records'])} plan-vs-actual records "
+          f"-> {args.ledger}")
+    print(render_ledger(tel.ledger))
+
+
 def run_out_of_core(spec, r, rte, args):
     """Wave-streaming path, all solvers (see the module docstring matrix)."""
     rtest = als_mod.ell_triplet(rte)
@@ -206,6 +223,7 @@ def run_out_of_core(spec, r, rte, args):
             print(f"reduction {tel.topology}: "
                   f"{tel.reduce_fast_bytes/2**20:.2f}MiB fast-link, "
                   f"{tel.reduce_slow_bytes/2**20:.2f}MiB slow-link")
+        _emit_ledger(tel, args)
         return
 
     def progress(_state, rec):
@@ -228,6 +246,7 @@ def run_out_of_core(spec, r, rte, args):
                                       ckpt_dir=ckpt, test_eval=rtest,
                                       mesh=mesh, callback=progress)
         print(_tel_summary(tel, ckpt))
+        _emit_ledger(tel, args)
     else:                       # hybrid: both phases stream
         from repro.sgd import SgdConfig, run_streaming_hybrid
         store, als_sched = _als_store_and_schedule(spec, r, args, p=p)
@@ -240,6 +259,7 @@ def run_out_of_core(spec, r, rte, args):
         print("[hybrid] " + _tel_summary(tel, ckpt))
         for name, part in sorted(tel.phases.items()):
             print(f"  [{name}] " + _tel_summary(part, ckpt))
+        _emit_ledger(tel, args)
 
 
 def run_sgd(spec, r, rt, rte, args):
@@ -312,7 +332,15 @@ def main():
                     help="record obs spans for the whole run and write a "
                          "Chrome-trace/Perfetto JSON file (load it at "
                          "ui.perfetto.dev)")
+    ap.add_argument("--ledger", default=None, metavar="OUT.json",
+                    help="with --out-of-core: write the run's plan-vs-"
+                         "actual ledger (predicted vs measured peaks, "
+                         "streamed/reduce bytes, fill waste) and print the "
+                         "repro.obs.report rendering")
     args = ap.parse_args()
+    if args.ledger and not args.out_of_core:
+        ap.error("--ledger requires --out-of-core (only the streaming "
+                 "drivers emit plan-vs-actual ledgers)")
     if args.mesh and not args.out_of_core:
         # checked here, not in _build_mesh: the in-core paths never reach
         # _build_mesh, and silently ignoring --mesh would let a user think

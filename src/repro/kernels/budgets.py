@@ -61,6 +61,46 @@ class KernelBudget:
     note: str = ""               # where the bound comes from
 
 
+def footprint_bytes(name: str, **dims) -> int:
+    """Estimated VMEM footprint of one launch of kernel ``name`` at the
+    given tile sizes — the same ``2 * (in + out) + scratch`` double-buffer
+    model the pallas-budget lint rule applies to the declared worst case
+    (see the module doc), evaluated at a *run's* launch dims so the
+    plan-vs-actual ledger can record budget-vs-launched.
+
+    Dims are the symbolic names of ``BUDGETS[name].dim_bounds`` (``F`` is
+    the f_mult-padded latent dim; the SGD kernel's ``K`` sizes the grid,
+    not a block, and is not needed).  Block sums mirror the wrappers'
+    BlockSpecs exactly: idx/val/mask/cnt stream as separate f32-width
+    blocks, factor/accumulator tiles as [**, F] / [**, F, F] blocks.
+    """
+    if name == "fused_herm_pallas":
+        tm, tk, F = dims["tm"], dims["tk"], dims["F"]
+        inb = tm + tm * tk * F + 2 * tm * tk        # diag, g, val, mask
+        out = tm * F * F + tm * F                   # A, B
+        scratch = out                               # accA, accB carry
+        return 4 * (2 * (inb + out) + scratch)
+    if name == "herm_hbm_accum":
+        tm, tk, F = dims["tm"], dims["tk"], dims["F"]
+        inb = tm * tk * F + 2 * tm * tk             # g, val, mask
+        out = tm * F * F + tm * F                   # A, B (HBM round-trip)
+        return 4 * 2 * (inb + out)
+    if name == "batch_solve_pallas":
+        tb, F = dims["tb"], dims["F"]
+        inb = tb * F * F + tb * F                   # A batch, B batch
+        out = tb * F                                # solved rows
+        return 4 * 2 * (inb + out)
+    if name == "sgd_tile_pallas":
+        mb, nb, f = dims["mb"], dims["nb"], dims["f"]
+        fac = (mb + nb) * f                         # x + theta blocks
+        inb = 1 + 3 * mb + fac                      # lr, idx/val/mask, x0/t0
+        out = fac
+        scratch = fac                               # resident factor carry
+        return 4 * (2 * (inb + out) + scratch)
+    raise KeyError(f"no footprint model for kernel {name!r}; "
+                   f"known: {sorted(BUDGETS)}")
+
+
 BUDGETS: dict[str, KernelBudget] = {
     "fused_herm_pallas": KernelBudget(
         vmem_limit=4 * (1 << 20),

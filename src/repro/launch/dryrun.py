@@ -19,12 +19,13 @@ Usage:
 import argparse
 import json
 import re
-import time
 import traceback
 
 import jax
 
 from repro.launch.mesh import make_production_mesh, HBM_BYTES
+from repro.obs.metrics import MetricsRegistry
+from repro.obs.trace import phase
 
 ARTIFACT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
                             "experiments", "dryrun")
@@ -107,20 +108,23 @@ def run_cell(arch_id: str, shape_name: str, multi_pod: bool,
         rec["status"] = "skip"
         return rec
 
-    t0 = time.time()
+    reg = MetricsRegistry()       # obs-clocked lower/compile timings
     with mesh:
-        lowered = jax.jit(fn, **jit_kwargs).lower(*args)
-        t1 = time.time()
-        compiled = lowered.compile()
-        t2 = time.time()
+        with phase("dryrun.lower", cat="lower", registry=reg,
+                   arch=arch_id, shape=shape_name):
+            lowered = jax.jit(fn, **jit_kwargs).lower(*args)
+        with phase("dryrun.compile", cat="compile", registry=reg,
+                   arch=arch_id, shape=shape_name):
+            compiled = lowered.compile()
+    ph = reg.phase_seconds()
     ma = compiled.memory_analysis()
     print(ma)
     ca = compiled.cost_analysis()
     print({k: ca.get(k) for k in ("flops", "bytes accessed")})
     rec.update({
         "status": "ok",
-        "lower_s": round(t1 - t0, 2),
-        "compile_s": round(t2 - t1, 2),
+        "lower_s": round(ph["lower"], 2),
+        "compile_s": round(ph["compile"], 2),
         "memory": {
             "argument_bytes": ma.argument_size_in_bytes,
             "output_bytes": ma.output_size_in_bytes,
@@ -172,16 +176,18 @@ def run_als_cell(als_name: str, multi_pod: bool, scheme="two_phase") -> dict:
     rec = {"arch": "cumf-als", "shape": als_name,
            "mesh": list(mesh.devices.shape), "axes": list(mesh.axis_names),
            "meta": meta}
-    t0 = time.time()
+    reg = MetricsRegistry()       # obs-clocked lower+compile timing
     with mesh:
-        lowered = jax.jit(fn).lower(*args)
-        compiled = lowered.compile()
+        with phase("dryrun.compile", cat="compile", registry=reg,
+                   als=als_name, scheme=scheme):
+            lowered = jax.jit(fn).lower(*args)
+            compiled = lowered.compile()
     ma = compiled.memory_analysis()
     print(ma)
     ca = compiled.cost_analysis()
     rec.update({
         "status": "ok",
-        "compile_s": round(time.time() - t0, 2),
+        "compile_s": round(reg.phase_seconds()["compile"], 2),
         "memory": {
             "argument_bytes": ma.argument_size_in_bytes,
             "output_bytes": ma.output_size_in_bytes,

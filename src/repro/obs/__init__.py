@@ -11,6 +11,10 @@ OBSERVABILITY.md for the span/metric catalog and a how-to):
   ``StreamTelemetry`` is a view over one of these registries.
 - ``obs.export`` — Chrome-trace / Perfetto JSON emission + the schema
   validator CI runs over the emitted file.
+- ``obs.ledger`` — plan-vs-actual records (predicted vs measured bytes /
+  peaks / reduce traffic / fill waste) with recomputed verdicts;
+  ``obs.report`` renders one, ``obs.regress`` exit-codes it (and the
+  bench history) for CI.
 
 Stdlib-only on purpose (like ``repro.analysis``): the lint job and the
 import sweep load it in any environment the repo loads in, and nothing in
@@ -18,6 +22,8 @@ the hot path pulls jax/numpy through the instrumentation.
 """
 from repro.obs.export import (chrome_trace, load_and_validate, span_counts,
                               validate_chrome_trace, write_trace)
+from repro.obs.ledger import (LEDGER_SCHEMA, Ledger, merge_ledgers,
+                              validate_ledger)
 from repro.obs.metrics import (DEFAULT_LATENCY_BUCKETS, Counter, Gauge,
                                Histogram, MetricsRegistry)
 from repro.obs.trace import (NOOP_SPAN, NULL_TRACER, NullTracer, SpanEvent,
@@ -26,8 +32,9 @@ from repro.obs.trace import (NOOP_SPAN, NULL_TRACER, NullTracer, SpanEvent,
 
 __all__ = [
     "Counter", "DEFAULT_LATENCY_BUCKETS", "Gauge", "Histogram",
-    "MetricsRegistry", "NOOP_SPAN", "NULL_TRACER", "NullTracer",
-    "SpanEvent", "Tracer", "chrome_trace", "current_tracer",
-    "load_and_validate", "phase", "set_tracer", "span_counts", "traced",
-    "validate_chrome_trace", "write_trace",
+    "LEDGER_SCHEMA", "Ledger", "MetricsRegistry", "NOOP_SPAN",
+    "NULL_TRACER", "NullTracer", "SpanEvent", "Tracer", "chrome_trace",
+    "current_tracer", "load_and_validate", "merge_ledgers", "phase",
+    "set_tracer", "span_counts", "traced", "validate_chrome_trace",
+    "validate_ledger", "write_trace",
 ]

@@ -53,11 +53,15 @@ from repro.checkpoint import CheckpointManager
 from repro.core import als as als_mod
 from repro.core.objective import rmse_padded
 from repro.data.prefetch import Prefetcher
+from repro.kernels.budgets import BUDGETS, footprint_bytes
+from repro.obs.ledger import Ledger
 from repro.obs.metrics import MetricsRegistry
 from repro.obs.trace import current_tracer, phase
 from repro.outofcore.runtime import (MemoryMeter, SimulatedFailure,
                                      StreamTelemetry, WaveCheckpointer)
-from repro.outofcore.schedule import IterationSchedule
+from repro.outofcore.schedule import (IterationSchedule,
+                                      predicted_stream_stats,
+                                      required_capacity_bytes)
 from repro.outofcore.store import FactorStore, RatingStore, triplet_nbytes
 
 __all__ = ["MemoryMeter", "SimulatedFailure", "StreamTelemetry",
@@ -170,6 +174,9 @@ def run_streaming_als(
         assert n % p == 0, (n, p)
         topo = topology or dreduce.linear_topology(n_data, group_size=2)
         assert topo.n_devices == n_data, (topo.describe(), n_data)
+        # per-reduce link traffic is a pure function of the payload size and
+        # the topology — priced once here, measured against in the ledger
+        topo_traffic = dreduce.reduce_traffic(n * (f * f + f + 1) * 4, topo)
         wave_update = make_wave_update_fn(
             mesh, cfg.lam, mode=cfg.mode,
             tm=cfg.tm, tk=cfg.tk, tb=cfg.tb, f_mult=cfg.f_mult)
@@ -242,6 +249,8 @@ def run_streaming_als(
             # per-device share: each device on the axis takes ONE batch of
             # the wave (a ragged last wave has fewer batches than n_data)
             meter.alloc(f"xwave{wave.index}", nb // len(wave.batches))
+            reg.counter("padded_slots").inc(trip[0].size)
+            reg.counter("nnz_streamed").inc(int(trip[2].sum()))
             dev = tuple(jnp.asarray(a) for a in trip)
             return wave, dev, nb
 
@@ -295,6 +304,10 @@ def run_streaming_als(
             nb = sum(triplet_nbytes(t) + x.nbytes for _, t, x in payload)
             # each simulated device holds ONE batch's shard + X slice
             meter.alloc(f"twave{wave.index}", nb // len(payload))
+            reg.counter("padded_slots").inc(
+                sum(t[0].size for _, t, _x in payload))
+            reg.counter("nnz_streamed").inc(
+                sum(int(t[2].sum()) for _, t, _x in payload))
             dev = [(b, tuple(jnp.asarray(a) for a in t), jnp.asarray(x))
                    for b, t, x in payload]
             return wave, dev, nb
@@ -348,6 +361,8 @@ def run_streaming_als(
             nb = int(idx.nbytes + val.nbytes + cnt.nbytes)
             # per-device share: one batch's rows x one model column block
             meter.alloc(f"xwave{wave.index}", nb // (len(wave.batches) * p))
+            reg.counter("padded_slots").inc(idx.size)
+            reg.counter("nnz_streamed").inc(int(cnt.sum()))
             pad = full_rows - idx.shape[0]
             if pad:      # ragged last wave: empty rows solve to x_u = 0
                 idx = np.pad(idx, ((0, pad), (0, 0)))
@@ -405,6 +420,9 @@ def run_streaming_als(
             nbatch = len(trips)
             trip_nb = sum(triplet_nbytes(t) for t in trips)
             x_nb = sum(x.nbytes for x in xs)
+            reg.counter("padded_slots").inc(sum(t[0].size for t in trips))
+            reg.counter("nnz_streamed").inc(
+                sum(int(t[2].sum()) for t in trips))
             # per device: 1/p of one batch's R^T shard (its theta rows) +
             # the batch's full X slice (replicated over the model axis)
             meter.alloc(f"twave{wave.index}",
@@ -453,8 +471,7 @@ def run_streaming_als(
     def _reduce_and_solve(A_dev, B_dev, c_dev):
         """Combine per-data-shard partials (paper Fig. 5b schedule), then
         each model shard solves and writes back its own theta rows."""
-        shard_f32 = n * (f * f + f + 1) * 4 // p   # one device's partial
-        traffic = dreduce.reduce_traffic(shard_f32 * p, topo)
+        traffic = topo_traffic
         with phase("als.reduce_partials", cat="reduce", tracer=tracer,
                    registry=reg, topology=topo_desc,
                    fast_bytes=traffic["fast_link_bytes"],
@@ -478,6 +495,24 @@ def run_streaming_als(
     theta_half = _theta_half_mesh if mesh is not None else _theta_half
 
     # ------------------------------------------------------------------
+    # Plan side of the ledger: per-wave predictions summed over exactly the
+    # waves this run will execute (resume-aware), before any wave streams.
+    pstats = predicted_stream_stats(ratings, sched, f)
+    pred = {"bytes": 0, "slots": 0, "nnz": 0, "reduces": 0}
+
+    def _predict_iteration(r: int):
+        for wi in range(r if r < W else W, W):          # solve-X half
+            pred["bytes"] += pstats["x_bytes"][wi]
+            pred["slots"] += pstats["x_slots"][wi]
+            pred["nnz"] += pstats["x_nnz"][wi]
+        for wi in range(max(0, r - W), W):              # accumulate-Theta
+            pred["bytes"] += pstats["t_bytes"][wi]
+            pred["slots"] += pstats["t_slots"][wi]
+            pred["nnz"] += pstats["t_nnz"][wi]
+        if mesh is not None:
+            pred["reduces"] += 1         # one Fig. 5b reduce per theta half
+
+    # ------------------------------------------------------------------
     history: List[dict] = []
     it0 = start_step // wpi
     with phase("als.stream", cat="driver", tracer=tracer, registry=reg,
@@ -485,6 +520,7 @@ def run_streaming_als(
         for it in range(it0, cfg.iters):
             resume_here = it == it0
             r = start_step % wpi if resume_here else 0
+            _predict_iteration(r)
             ph0 = reg.phase_seconds()
             with phase("als.iteration", cat="iteration", tracer=tracer,
                        registry=reg, iteration=it + 1):
@@ -523,5 +559,52 @@ def run_streaming_als(
         if mgr is not None:
             mgr.wait()
     reg.gauge("peak_bytes").set(meter.peak_bytes)
+
+    # ------------------------------------------------------------------
+    # Close the loop: every prediction the planner/schedule/budget layer
+    # made for this run, confronted with what the meters measured.
+    led = Ledger(solver="als", mesh=mesh is not None, p=p,
+                 n_data=n_data, waves=W, iterations=cfg.iters - it0,
+                 f=f, m_pad=m_pad, n=n, mode=cfg.mode,
+                 resumed_from_step=start_step, topology=topo_desc,
+                 phase_seconds=reg.phase_seconds())
+    led.record("peak_device_bytes", sched.capacity_bytes, meter.peak_bytes,
+               unit="bytes", check="le")
+    led.record("modeled_peak_bytes",
+               required_capacity_bytes(ratings, sched, f,
+                                       prefetch_depth=prefetch_depth),
+               meter.peak_bytes, unit="bytes", check="le")
+    meas_slots = int(reg.counter("padded_slots").value)
+    meas_nnz = int(reg.counter("nnz_streamed").value)
+    led.record("bytes_streamed", pred["bytes"],
+               int(reg.counter("bytes_streamed").value), unit="bytes")
+    led.record("padded_slots", pred["slots"], meas_slots, unit="slots")
+    led.record("nnz_streamed", pred["nnz"], meas_nnz, unit="ratings")
+    led.record("fill_waste_ratio",
+               pred["slots"] / pred["nnz"] if pred["nnz"] else 0.0,
+               meas_slots / meas_nnz if meas_nnz else 0.0,
+               unit="ratio", check="rel", rel_tol=1e-9)
+    led.record("worst_fill_bound", ratings.worst_fill,
+               meas_slots / meas_nnz if meas_nnz else 0.0,
+               unit="ratio", check="le")
+    if mesh is not None:
+        led.record("reduce_fast_bytes",
+                   pred["reduces"] * topo_traffic["fast_link_bytes"],
+                   int(reg.counter("reduce_fast_bytes").value), unit="bytes")
+        led.record("reduce_slow_bytes",
+                   pred["reduces"] * topo_traffic["slow_link_bytes"],
+                   int(reg.counter("reduce_slow_bytes").value), unit="bytes")
+    F = -(-f // cfg.f_mult) * cfg.f_mult
+    led.record("vmem/fused_herm_pallas",
+               BUDGETS["fused_herm_pallas"].vmem_limit,
+               footprint_bytes("fused_herm_pallas",
+                               tm=cfg.tm, tk=cfg.tk, F=F),
+               unit="bytes", check="le", mode=cfg.mode)
+    led.record("vmem/batch_solve_pallas",
+               BUDGETS["batch_solve_pallas"].vmem_limit,
+               footprint_bytes("batch_solve_pallas", tb=cfg.tb, F=F),
+               unit="bytes", check="le", mode=cfg.mode)
+
     return factors, history, StreamTelemetry.from_registry(
-        reg, capacity_bytes=sched.capacity_bytes, topology=topo_desc)
+        reg, capacity_bytes=sched.capacity_bytes, topology=topo_desc,
+        ledger=led.to_obj())

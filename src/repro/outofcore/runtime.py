@@ -15,6 +15,7 @@ with the same public fields callers always read.  The registry counter /
 gauge names that view reads are the contract::
 
     counters: waves_run, batches_loaded, bytes_streamed,
+              padded_slots, nnz_streamed,
               reduce_fast_bytes, reduce_slow_bytes,
               phase_seconds/<category>   (fed by obs.trace.phase)
     gauges:   peak_bytes, resumed_from_step
@@ -28,6 +29,7 @@ import dataclasses
 import threading
 from typing import Callable, Mapping, Optional
 
+from repro.obs.ledger import merge_ledgers
 from repro.obs.trace import phase
 
 
@@ -68,6 +70,13 @@ class StreamTelemetry:
       phase name (``als/solve``, ``sgd/solve``).
     - ``phases``: for merged telemetries only, the per-phase
       ``StreamTelemetry`` objects keyed by phase name (``als``/``sgd``).
+
+    The pad/fill accounting (ISSUE 8): ``padded_slots`` counts every ELL
+    slot streamed in a rating payload (padding included), ``nnz_streamed``
+    the true ratings under those slots, and ``fill_waste_ratio`` their
+    quotient — the measured twin of ``RatingStore.worst_fill``'s planning
+    bound.  ``ledger`` is the run's serialized plan-vs-actual ledger
+    (``repro.obs.ledger``), empty when the driver predates it.
     """
 
     capacity_bytes: int = 0
@@ -75,6 +84,9 @@ class StreamTelemetry:
     waves_run: int = 0
     batches_loaded: int = 0
     bytes_streamed: int = 0      # host->device rating + factor-slice traffic
+    padded_slots: int = 0        # ELL slots streamed (padding included)
+    nnz_streamed: int = 0        # true ratings under those slots
+    fill_waste_ratio: float = 0.0  # padded_slots / nnz_streamed
     resumed_from_step: int = 0
     wall_seconds: float = 0.0
     # mesh streaming only: per-link traffic of the topology-aware reduction
@@ -85,27 +97,36 @@ class StreamTelemetry:
     # observability additions (ISSUE 7)
     phase_seconds: dict = dataclasses.field(default_factory=dict)
     phases: dict = dataclasses.field(default_factory=dict)
+    # plan-vs-actual ledger (ISSUE 8): serialized repro.obs.ledger object
+    ledger: dict = dataclasses.field(default_factory=dict)
 
     @classmethod
     def from_registry(cls, registry, *, capacity_bytes: int = 0,
-                      topology: str = "") -> "StreamTelemetry":
+                      topology: str = "",
+                      ledger: Optional[dict] = None) -> "StreamTelemetry":
         """The post-run view over a driver's metrics registry."""
         def cnt(name):
             return registry.counter(name).value
 
         phases = registry.phase_seconds()
+        slots = int(cnt("padded_slots"))
+        nnz = int(cnt("nnz_streamed"))
         return cls(
             capacity_bytes=int(capacity_bytes),
             peak_bytes=int(registry.gauge("peak_bytes").value),
             waves_run=int(cnt("waves_run")),
             batches_loaded=int(cnt("batches_loaded")),
             bytes_streamed=int(cnt("bytes_streamed")),
+            padded_slots=slots,
+            nnz_streamed=nnz,
+            fill_waste_ratio=slots / nnz if nnz else 0.0,
             resumed_from_step=int(registry.gauge("resumed_from_step").value),
             wall_seconds=phases.get("driver", 0.0),
             reduce_fast_bytes=int(cnt("reduce_fast_bytes")),
             reduce_slow_bytes=int(cnt("reduce_slow_bytes")),
             topology=topology,
             phase_seconds=phases,
+            ledger=dict(ledger) if ledger else {},
         )
 
 
@@ -123,12 +144,18 @@ def merge_telemetry(
     live = {k: t for k, t in parts.items() if t is not None}
     assert live, "merge_telemetry needs at least one non-None phase"
     tels = list(live.values())
+    slots = sum(t.padded_slots for t in tels)
+    nnz = sum(t.nnz_streamed for t in tels)
+    ledgers = {name: t.ledger for name, t in live.items() if t.ledger}
     return StreamTelemetry(
         capacity_bytes=max(t.capacity_bytes for t in tels),
         peak_bytes=max(t.peak_bytes for t in tels),
         waves_run=sum(t.waves_run for t in tels),
         batches_loaded=sum(t.batches_loaded for t in tels),
         bytes_streamed=sum(t.bytes_streamed for t in tels),
+        padded_slots=slots,
+        nnz_streamed=nnz,
+        fill_waste_ratio=slots / nnz if nnz else 0.0,
         resumed_from_step=max(t.resumed_from_step for t in tels),
         wall_seconds=sum(t.wall_seconds for t in tels),
         reduce_fast_bytes=sum(t.reduce_fast_bytes for t in tels),
@@ -138,6 +165,7 @@ def merge_telemetry(
                        for name, t in live.items()
                        for cat, secs in t.phase_seconds.items()},
         phases=dict(live),
+        ledger=merge_ledgers(ledgers) if ledgers else {},
     )
 
 

@@ -280,3 +280,73 @@ def required_capacity_bytes(store, sched: IterationSchedule, f: int,
     t_payload = n * (K_loc * 8 + 4) // p + (sched.m_pad // q) * f * 4
     t_half = acc_bytes + bufs * t_payload + n * f * 4 // p
     return max(x_half, t_half)
+
+
+# ---------------------------------------------------------------------------
+# Plan-side streaming predictions (the ledger's "predicted" column).
+# ---------------------------------------------------------------------------
+
+def predicted_stream_stats(store, sched: IterationSchedule, f: int) -> dict:
+    """Per-wave plan-side streaming stats of ONE ALS iteration, computed
+    from the store's array shapes alone — no wave is ever materialized.
+
+    Returns six lists aligned with ``sched.waves``: ``x_bytes`` /
+    ``x_slots`` / ``x_nnz`` for the solve-X half and ``t_bytes`` /
+    ``t_slots`` / ``t_nnz`` for the accumulate-Theta half.  ``*_bytes``
+    predict exactly what the driver's ``bytes_streamed`` counter will
+    measure for that wave (rating triplets, and on the theta half the
+    replicated fresh X slices too); ``*_slots`` count the padded ELL slots
+    streamed (rating payloads only — dense factor slices carry no padding)
+    and ``*_nnz`` the true ratings under them, from the host-resident cnt
+    arrays.  Per-wave granularity is what keeps the prediction exact under
+    ragged last waves and mid-iteration resume: the driver sums exactly
+    the waves it executes.  On a ``p > 1`` schedule the solve-X side uses
+    the mesh triplet layout (``x_slice_mesh_triplet``'s pre-padding
+    shapes).
+    """
+    p = sched.p
+    if p == 1:
+        K = store.r.K
+        per_row_bytes = K * 8 + 4             # idx + val slots, cnt
+        per_row_slots = K
+    else:
+        K_loc = store.r_model_parts.idx.shape[-1]
+        per_row_bytes = p * (K_loc * 8 + 4)   # [rows, p*K_loc] x2 + [rows, p]
+        per_row_slots = p * K_loc
+    cnt_rows = store.r.cnt                    # [m_pad], padded rows cnt = 0
+    x_bytes, x_slots, x_nnz = [], [], []
+    for w in sched.waves:
+        x_bytes.append(w.rows * per_row_bytes)
+        x_slots.append(w.rows * per_row_slots)
+        x_nnz.append(int(cnt_rows[w.row_start:w.row_stop].sum()))
+    q, n, K_t = store.rt_parts.idx.shape
+    batch_trip = n * (K_t * 8 + 4)            # one R^T shard's triplet
+    t_bytes, t_slots, t_nnz = [], [], []
+    for w in sched.waves:
+        t_bytes.append(sum(
+            batch_trip + (b.row_stop - b.row_start) * f * 4
+            for b in w.batches))
+        t_slots.append(len(w.batches) * n * K_t)
+        t_nnz.append(sum(int(store.rt_parts.cnt[b.index].sum())
+                         for b in w.batches))
+    return {"x_bytes": x_bytes, "x_slots": x_slots, "x_nnz": x_nnz,
+            "t_bytes": t_bytes, "t_slots": t_slots, "t_nnz": t_nnz}
+
+
+def predicted_sgd_stream_stats(tiles, sched: SgdEpochSchedule) -> dict:
+    """Plan-side per-tile streaming constants for the SGD ledger.
+
+    Every streamed tile moves the same bytes — its ELL triplet
+    (``sgd_tile_bytes``) plus the two factor blocks the driver fetches
+    synchronously and the measured counter includes — and the same padded
+    slot count; only the true nnz varies per tile, so that comes back as
+    the ``[g, g]`` per-tile matrix from the grid's host-resident cnt.
+    The driver sums these over exactly the (possibly resumed-into,
+    per-epoch-permuted) waves it executes.
+    """
+    mb, nb, K, f = sched.mb, sched.nb, sched.K, sched.f
+    return {
+        "tile_bytes": sgd_tile_bytes(mb, K) + (mb + nb) * f * 4,
+        "tile_slots": mb * K,
+        "tile_nnz": tiles.grid.cnt.sum(axis=-1),   # [g, g]
+    }

@@ -44,11 +44,15 @@ import numpy as np
 from repro.checkpoint import CheckpointManager
 from repro.core.objective import rmse_padded
 from repro.data.prefetch import Prefetcher
+from repro.kernels.budgets import BUDGETS, footprint_bytes
+from repro.obs.ledger import Ledger
 from repro.obs.metrics import MetricsRegistry
 from repro.obs.trace import current_tracer, phase
 from repro.outofcore.runtime import (MemoryMeter, StreamTelemetry,
                                      WaveCheckpointer)
-from repro.outofcore.schedule import SgdEpochSchedule
+from repro.outofcore.schedule import (SgdEpochSchedule,
+                                      predicted_sgd_stream_stats,
+                                      sgd_required_capacity_bytes)
 from repro.outofcore.store import FactorStore, TileStore, triplet_nbytes
 from repro.sgd.train import (SgdConfig, epoch_lr, epoch_set_order, sgd_init,
                              sgd_tiles_update)
@@ -149,10 +153,20 @@ def run_streaming_sgd(
         ckpt.save(step, lambda: {"x": factors.x.copy(),
                                  "theta": factors.theta.copy()})
 
+    # Plan side of the ledger: every tile moves the same bytes/slots, only
+    # nnz varies; summed over exactly the waves each epoch will execute.
+    pst = predicted_sgd_stream_stats(tiles, sched)
+    pred = {"bytes": 0, "slots": 0, "nnz": 0}
+
     def _epoch(ep: int, first_wave: int):
         lr_t = jnp.float32(epoch_lr(cfg, ep))
         order = np.asarray(epoch_set_order(cfg.seed, ep, g))
         waves = sched.epoch_waves(order)
+        for wave in waves[first_wave:]:
+            pred["bytes"] += len(wave.tiles) * pst["tile_bytes"]
+            pred["slots"] += len(wave.tiles) * pst["tile_slots"]
+            pred["nnz"] += sum(int(pst["tile_nnz"][i][j])
+                               for i, j in wave.tiles)
 
         def gen():
             for wave in waves[first_wave:]:
@@ -164,6 +178,9 @@ def run_streaming_sgd(
             payload = sum(triplet_nbytes(t) for t in trips)
             # one (simulated or real) worker holds ONE tile of the wave
             meter.alloc(f"tilewave{wave.index}", payload // len(trips))
+            reg.counter("padded_slots").inc(sum(t[0].size for t in trips))
+            reg.counter("nnz_streamed").inc(
+                sum(int(t[2].sum()) for t in trips))
             dev = (_place(np.stack([t[0] for t in trips])),
                    _place(np.stack([t[1] for t in trips])),
                    _place(np.stack([t[2] for t in trips])))
@@ -246,5 +263,36 @@ def run_streaming_sgd(
         if mgr is not None:
             mgr.wait()
     reg.gauge("peak_bytes").set(meter.peak_bytes)
+
+    # Close the loop: the schedule's predictions vs the meters.
+    meas_slots = int(reg.counter("padded_slots").value)
+    meas_nnz = int(reg.counter("nnz_streamed").value)
+    meas_ratio = meas_slots / meas_nnz if meas_nnz else 0.0
+    led = Ledger(solver="sgd", mesh=mesh is not None, g=g, mb=mb, nb=nb,
+                 f=f, n_workers=sched.n_workers,
+                 epochs=cfg.epochs - ep0, mode=cfg.mode,
+                 resumed_from_step=start_step,
+                 phase_seconds=reg.phase_seconds())
+    led.record("peak_device_bytes", sched.capacity_bytes, meter.peak_bytes,
+               unit="bytes", check="le")
+    led.record("modeled_peak_bytes",
+               sgd_required_capacity_bytes(mb, nb, sched.K, f,
+                                           prefetch_depth=prefetch_depth),
+               meter.peak_bytes, unit="bytes", check="le")
+    led.record("bytes_streamed", pred["bytes"],
+               int(reg.counter("bytes_streamed").value), unit="bytes")
+    led.record("padded_slots", pred["slots"], meas_slots, unit="slots")
+    led.record("nnz_streamed", pred["nnz"], meas_nnz, unit="ratings")
+    led.record("fill_waste_ratio",
+               pred["slots"] / pred["nnz"] if pred["nnz"] else 0.0,
+               meas_ratio, unit="ratio", check="rel", rel_tol=1e-9)
+    led.record("worst_fill_bound", tiles.grid.fill, meas_ratio,
+               unit="ratio", check="le")
+    F = -(-f // cfg.f_mult) * cfg.f_mult
+    led.record("vmem/sgd_tile_pallas",
+               BUDGETS["sgd_tile_pallas"].vmem_limit,
+               footprint_bytes("sgd_tile_pallas", mb=mb, nb=nb, f=F),
+               unit="bytes", check="le", mode=cfg.mode)
+
     return factors, history, StreamTelemetry.from_registry(
-        reg, capacity_bytes=sched.capacity_bytes)
+        reg, capacity_bytes=sched.capacity_bytes, ledger=led.to_obj())
