@@ -7,9 +7,13 @@ iteration / SGD epoch) appends a (cumulative seconds, test RMSE) point.
 A fourth ``sgd_stream`` row runs the same SGD recipe through the
 out-of-core tile-wave driver at a capped capacity (waves >= 2 per
 diagonal set), recording the budget, the metered peak, and the streamed
-traffic next to its RMSE curve.  The records land in BENCH_sgd.json via
-``benchmarks/run.py``'s generic JSON path; ``run(quick=True)`` (the CI
-smoke) shrinks the problem and epoch counts.
+traffic next to its RMSE curve.  The ``sgd_stream_skew`` /
+``sgd_stream_binned`` pair reruns that streaming recipe on power-law
+*users*: the uniform grid as its own baseline vs degree-sorted
+per-tile-K tiles, which must cut fill waste >= 1.5x at the same RMSE.
+The records land in BENCH_sgd.json via ``benchmarks/run.py``'s generic
+JSON path; ``run(quick=True)`` (the CI smoke) shrinks the problem and
+epoch counts.
 """
 from __future__ import annotations
 
@@ -105,6 +109,69 @@ def run(quick: bool = False):
                  phase_seconds={k: round(v, 4)
                                 for k, v in tel.phase_seconds.items()})
     assert rec["peak_bytes"] <= rec["capacity_bytes"], rec
+
+    # degree-binned streaming pair: power-law *users* (alpha_user, the skew
+    # real rating matrices show on both axes) make the grid-wide uniform K
+    # pad badly.  Two NEW rows on that data — the uniform layout as its own
+    # baseline, then degree-sorted per-tile-K tiles — both refining the
+    # SAME ALS warm start (hybrid protocol), so the layouts are compared at
+    # their converged plateau: >= 1.5x less fill waste at the same RMSE
+    # (the degree sort changes the still-exact visit order, so factors are
+    # equivalent, not bit-equal).
+    import numpy as np
+
+    from repro.outofcore import FactorStore
+    from repro.sgd.hybrid import sgd_state_from_als
+
+    skew_r, skew_rt, skew_rte, _ = synth.make_synthetic_ratings(
+        spec, seed=3, noise=0.1, alpha_user=1.2)
+    skew_rr, skew_rtt, skew_rtest = (
+        als_mod.ell_triplet(e) for e in (skew_r, skew_rt, skew_rte))
+    warm_state, _ = als_mod.als_train(
+        skew_rr, skew_rtt, skew_r.m, skew_rt.m,
+        als_mod.AlsConfig(f=spec.f, lam=spec.lam, iters=4, mode="ref"))
+    skew_cfg = SgdConfig(f=spec.f, lam=spec.lam, lr=0.05,
+                         epochs=sgd_cfg.epochs, schedule="cosine",
+                         mode="ref", seed=1)
+
+    def stream_skew(solver, **grid_kw):
+        grid = block_ell(skew_r, g=4, **grid_kw)
+        sched = build_sgd_schedule(grid, spec.f, n_workers=2)
+        st0 = sgd_state_from_als(warm_state, grid)
+        warm = FactorStore.from_arrays(np.asarray(st0.x),
+                                       np.asarray(st0.theta))
+        points, cb = _timed_curve()
+        _, _, tel = run_streaming_sgd(TileStore(grid), sched, skew_cfg,
+                                      factors=warm, test_eval=skew_rtest,
+                                      callback=cb)
+        return record(solver, points, skew_cfg.epochs,
+                      waves_per_epoch=sched.waves_per_epoch,
+                      per_tile_k=grid.tile_K is not None,
+                      degree_sorted=grid.user_perm is not None,
+                      capacity_bytes=tel.capacity_bytes,
+                      peak_bytes=tel.peak_bytes,
+                      bytes_streamed=tel.bytes_streamed,
+                      padded_slots=tel.padded_slots,
+                      nnz_streamed=tel.nnz_streamed,
+                      fill_waste_ratio=round(tel.fill_waste_ratio, 6),
+                      wall_seconds=tel.wall_seconds,
+                      phase_seconds={k: round(v, 4)
+                                     for k, v in tel.phase_seconds.items()})
+
+    urec = stream_skew("sgd_stream_skew")
+    brec = stream_skew("sgd_stream_binned", per_tile_k=True,
+                       degree_sort=True)
+    brec["fill_waste_vs_uniform"] = round(
+        urec["fill_waste_ratio"] / brec["fill_waste_ratio"], 4)
+    assert brec["fill_waste_vs_uniform"] >= 1.5, (
+        urec["fill_waste_ratio"], brec["fill_waste_ratio"])
+    assert brec["peak_bytes"] <= brec["capacity_bytes"], brec
+    assert brec["final_rmse"] <= urec["final_rmse"] * 1.02, \
+        (brec["final_rmse"], urec["final_rmse"])
+    emit("sgd_binned_fill_win", 0.0,
+         f"fill_waste {urec['fill_waste_ratio']:.3f} -> "
+         f"{brec['fill_waste_ratio']:.3f} "
+         f"({brec['fill_waste_vs_uniform']:.2f}x, per_tile_k+degree_sort)")
 
     # p > 1 mesh row: the same tile waves sharded one-tile-per-device over a
     # (data, model) mesh.  Skipped (with a CSV note) below 8 devices; CI's

@@ -10,6 +10,7 @@ from __future__ import annotations
 from typing import Optional, Sequence
 
 from repro.analysis.engine import Rule
+from repro.analysis.rules.bin_shape import BinShapeRule
 from repro.analysis.rules.checkpoint_aliasing import CheckpointAliasingRule
 from repro.analysis.rules.compat_routing import CompatRoutingRule
 from repro.analysis.rules.obs_routing import ObsRoutingRule
@@ -24,6 +25,7 @@ ALL_RULES: tuple[Rule, ...] = (
     ShardSafetyRule(),
     CheckpointAliasingRule(),
     ObsRoutingRule(),
+    BinShapeRule(),
 )
 
 
@@ -44,6 +46,7 @@ def get_rules(names: Optional[Sequence[str]] = None) -> list[Rule]:
     return [known[n] for n in names]
 
 
-__all__ = ["ALL_RULES", "CheckpointAliasingRule", "CompatRoutingRule",
-           "ObsRoutingRule", "PallasBudgetRule", "PrecisionDriftRule",
-           "ShardSafetyRule", "get_rules", "rule_names"]
+__all__ = ["ALL_RULES", "BinShapeRule", "CheckpointAliasingRule",
+           "CompatRoutingRule", "ObsRoutingRule", "PallasBudgetRule",
+           "PrecisionDriftRule", "ShardSafetyRule", "get_rules",
+           "rule_names"]

@@ -169,3 +169,92 @@ def ell_triplet(ell) -> tuple[jax.Array, jax.Array, jax.Array]:
     return (jnp.asarray(np.asarray(ell.idx), jnp.int32),
             jnp.asarray(np.asarray(ell.val), jnp.float32),
             jnp.asarray(np.asarray(ell.cnt), jnp.int32))
+
+
+# ---------------------------------------------------------------------------
+# Degree-binned dispatch: the same kernels, once per bin at that bin's K.
+# One compiled shape per bin (bounded by n_bins); padding slots are exact
+# zeros, so per-bin K changes no f32 sum and binned == unbinned numerically.
+# ---------------------------------------------------------------------------
+
+def update_factor_binned(fixed, binned, cfg: AlsConfig) -> jax.Array:
+    """Solve one factor from a :class:`~repro.sparse.padded.BinnedELL`:
+    dispatch ``als_update_factor`` once per degree bin at the bin's own K,
+    scatter results back to original row order through ``binned.rows``."""
+    out = jnp.zeros((binned.m, cfg.f), jnp.float32)
+    for b, rows in zip(binned.bins, binned.rows):
+        if b.m == 0:
+            continue
+        idx, val, cnt = ell_triplet(b)
+        xb = _update_factor(fixed, idx, val, cnt, cfg)
+        out = out.at[jnp.asarray(np.asarray(rows), jnp.int32)].set(xb)
+    return out
+
+
+def update_rows_binned(fixed, binned, cfg: AlsConfig) -> jax.Array:
+    """Binned per-slice update (out-of-core wave driver, solve side): the
+    slice arrives as a BinnedELL with slice-local row indices; results come
+    back in slice row order, exactly like :func:`update_rows` on the
+    uniform layout."""
+    return update_factor_binned(fixed, binned, cfg)
+
+
+def partial_herm_binned(x_batch, binned_loc, cfg: AlsConfig):
+    """Binned per-batch partial Hermitian (accumulate side): run
+    :func:`partial_herm` once per bin of the batch-local R^T shard and
+    scatter-add into full-size (A_j, B_j), so the caller's per-batch
+    ``A += A_j`` accumulation is layout-blind."""
+    n, f = binned_loc.m, cfg.f
+    A = jnp.zeros((n, f, f), jnp.float32)
+    B = jnp.zeros((n, f), jnp.float32)
+    for b, rows in zip(binned_loc.bins, binned_loc.rows):
+        if b.m == 0:
+            continue
+        idx, val, cnt = ell_triplet(b)
+        Ab, Bb = partial_herm(x_batch, idx, val, cnt, cfg)
+        r = jnp.asarray(np.asarray(rows), jnp.int32)
+        A = A.at[r].add(Ab)
+        B = B.at[r].add(Bb)
+    return A, B
+
+
+def rmse_binned(x, theta, binned) -> float:
+    """RMSE over the nonzeros of a BinnedELL (per-bin SSE, one sqrt)."""
+    from repro.core.objective import _sq_err_padded
+
+    sse, nnz = 0.0, 0
+    for b, rows in zip(binned.bins, binned.rows):
+        if b.m == 0:
+            continue
+        idx, val, cnt = ell_triplet(b)
+        s, k = _sq_err_padded(x[jnp.asarray(np.asarray(rows), jnp.int32)],
+                              theta, idx, val, cnt)
+        sse += float(s)
+        nnz += int(k)
+    return (sse / max(nnz, 1)) ** 0.5
+
+
+def als_train_binned(
+    rb, rtb, cfg: AlsConfig,
+    test: Optional[tuple] = None,
+    callback=None,
+) -> tuple[AlsState, list[dict]]:
+    """In-core training driver over binned layouts: the same alternating
+    schedule as :func:`als_train` with both half-updates dispatched per bin.
+    ``rb`` / ``rtb`` are BinnedELLs of R (rows=users) and R^T (rows=items).
+    """
+    state = als_init(rb.m, rtb.m, cfg)
+    history: list[dict] = []
+    for it in range(cfg.iters):
+        x = update_factor_binned(state.theta, rb, cfg)
+        theta = update_factor_binned(x, rtb, cfg)
+        state = AlsState(x=x, theta=theta, iteration=state.iteration + 1)
+        rec = {"iteration": it + 1}
+        if test is not None:
+            rec["test_rmse"] = float(
+                rmse_padded(state.x, state.theta, test[0], test[1], test[2]))
+        rec["train_rmse"] = rmse_binned(state.x, state.theta, rb)
+        history.append(rec)
+        if callback is not None:
+            callback(state, rec)
+    return state, history

@@ -17,7 +17,7 @@ and q to the "data" axis; q larger than the data axis runs in waves
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
+from typing import Optional, Sequence, Tuple
 
 GiB = 1 << 30
 
@@ -117,6 +117,7 @@ def plan_for(
     eps: int = 512 << 20,
     buffers: int = 1,
     acc_bytes: int = 0,
+    bin_fills: Optional[Sequence[Tuple[int, int]]] = None,
 ) -> PartitionPlan:
     """Cost a *given* (p, q) choice — the forced-plan entry point.
 
@@ -129,7 +130,18 @@ def plan_for(
     accumulate-Theta residents (``streaming_acc_bytes(n, f)``) as their own
     p-sharded term — each model shard owns 1/p of the accumulated systems —
     instead of overloading the flat ``eps`` headroom.
+
+    ``bin_fills`` prices a degree-binned layout: per-bin ``(padded_slots,
+    nnz)`` pairs (e.g. ``RatingStore.bin_fill_pairs()``) whose aggregate
+    ``sum(slots) / sum(nnz)`` — the fill a binned store actually streams —
+    overrides the scalar ``fill``.  On power-law data this is a multi-x
+    reduction of the R_shard term, which is exactly where binning buys its
+    capacity headroom.
     """
+    if bin_fills:
+        slots = sum(int(s) for s, _ in bin_fills)
+        true_nnz = sum(int(z) for _, z in bin_fills)
+        fill = slots / max(true_nnz, 1)
     total, terms = _bytes_per_device(
         m, n, nnz, f, p, q, fill, dtype_bytes, eps, buffers, acc_bytes)
     return PartitionPlan(p, q, total, terms, total < hbm_bytes, -(-q // n_data))

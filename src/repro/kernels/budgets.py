@@ -28,6 +28,13 @@ construction (tm/tk/tb defaults, ``f_mult=128`` padding) except for the
 SGD tile sizes mb/nb, which ``sgd.blocking`` keeps at or below the bound
 for every grid the repo builds (g >= 2 over the bench shapes).
 
+Degree-binned dispatch (``BinnedELL`` bins, per-tile-K SGD groups) needs
+no budget entries of its own: each per-bin call is the same wrapper at a
+*smaller* K (bins satisfy ``K_b <= K <= dim_bounds`` by construction, and
+the ALS kernels' VMEM footprint is K-independent anyway — they stream
+fixed [tm, tk] rating tiles and grid over K), so the uniform worst-case
+bounds declared here dominate every binned call site.
+
 Worst-case footprints under the declared bounds (the numbers the limits
 are set against, with headroom for interpreter/layout slack):
 

@@ -40,6 +40,35 @@ Paper vocabulary -> implementation map:
 - **checkpoint/restart** (§4.4 fault tolerance): every completed wave
   commits factors (+ Hermitian accumulators mid-half) through
   ``checkpoint.CheckpointManager``; a killed run resumes mid-iteration.
+- **degree-binned layout** (§4.1 binning): ``RatingStore(n_bins > 1)``
+  additionally keeps R and each R^T shard as
+  ``sparse.padded.BinnedELL`` — rows grouped into ~log-spaced degree bins,
+  each padded at its own tight K.  Layout ownership rules:
+
+  1. The binned shards are *views of the same nonzeros* as the uniform
+     arrays (which stay resident for eval/compat); masked padding slots
+     are exact zeros, so binned and unbinned runs agree to float roundoff.
+  2. Factors and checkpoints always live in ORIGINAL row order — the bin
+     permutation (``perm``/``inv_perm``) never escapes the store; the
+     binned ALS kernels scatter per-bin results back through
+     ``BinnedELL.rows`` (checkpoints are layout-agnostic: a binned run
+     resumes a uniform checkpoint and vice versa).
+  3. The wave scheduler relies on stable grouping: each bin's original-row
+     list ascends, so any wave range ``[start, stop)`` cuts every bin in
+     one contiguous span (``bin_spans``) and per-wave byte/slot
+     predictions stay exact.
+  4. Planner pricing goes through ``RatingStore.bin_fill_pairs()`` ->
+     ``plan_for(bin_fills=...)``; the ledger's ``fill_waste_ratio`` and
+     per-component ``fill_bound/*`` records measure the binned layout.
+  5. Binned + mesh (``p > 1``) is an explicit ROADMAP follow-up: the
+     store asserts ``p == 1`` when ``n_bins > 1`` (theta-half shard
+     stacking needs batch-uniform item bins).
+
+  The SGD side gets the same treatment at tile granularity:
+  ``sgd.blocking.block_coo(per_tile_k=True, degree_sort=True)`` records a
+  ladder-quantized ``tile_K`` per tile (plus an optional descending-degree
+  user placement), and the streaming SGD driver dispatches each wave's
+  tiles in same-K groups sliced to their own K.
 
 The subsystem is **solver-generic**: schedules are built from abstract wave
 work items (``schedule.WaveItem``) and the drivers share one streaming
@@ -59,12 +88,13 @@ from repro.outofcore.schedule import (IterationSchedule, SgdEpochSchedule,
                                       required_capacity_bytes,
                                       sgd_required_capacity_bytes)
 from repro.outofcore.sgd_driver import run_streaming_sgd
-from repro.outofcore.store import FactorStore, RatingStore, TileStore
+from repro.outofcore.store import (FactorStore, RatingStore, TileStore,
+                                   binned_nbytes)
 
 __all__ = [
     "FactorStore", "IterationSchedule", "MemoryMeter", "RatingStore",
     "SgdEpochSchedule", "SimulatedFailure", "StreamTelemetry", "TileStore",
-    "TileWave", "Wave", "WaveCheckpointer", "WaveItem", "build_schedule",
-    "build_sgd_schedule", "required_capacity_bytes",
+    "TileWave", "Wave", "WaveCheckpointer", "WaveItem", "binned_nbytes",
+    "build_schedule", "build_sgd_schedule", "required_capacity_bytes",
     "run_streaming_als", "run_streaming_sgd", "sgd_required_capacity_bytes",
 ]

@@ -62,10 +62,21 @@ from repro.outofcore.runtime import (MemoryMeter, SimulatedFailure,
 from repro.outofcore.schedule import (IterationSchedule,
                                       predicted_stream_stats,
                                       required_capacity_bytes)
-from repro.outofcore.store import FactorStore, RatingStore, triplet_nbytes
+from repro.outofcore.store import (FactorStore, RatingStore, binned_nbytes,
+                                   triplet_nbytes)
 
 __all__ = ["MemoryMeter", "SimulatedFailure", "StreamTelemetry",
            "run_streaming_als"]
+
+
+def _binned_cnt_rows(binned) -> np.ndarray:
+    """Full-length [m] float32 per-row counts of a BinnedELL (bins hold
+    disjoint row subsets, so plain assignment reassembles the vector)."""
+    out = np.zeros(binned.m, np.float32)
+    for b, r in zip(binned.bins, binned.rows):
+        if b.m:
+            out[r] = b.cnt
+    return out
 
 
 def _zeros_ckpt_tree(m_pad: int, n: int, f: int, n_dev: int = 0) -> dict:
@@ -139,6 +150,12 @@ def run_streaming_als(
     ``phase_seconds`` breakdown, which each history record also carries as
     its per-iteration delta.
 
+    With a degree-binned ``RatingStore`` (``n_bins > 1``, p = 1 only) both
+    halves stream bin-wise cuts and dispatch the kernels once per bin at
+    that bin's own K — identical factor trajectory (padding slots are exact
+    zeros), strictly fewer streamed slots/bytes; the ``update_rows_fn`` /
+    ``partial_herm_fn`` hooks are bypassed on this path.
+
     With ``mesh`` set (axes ``("data", "model")``, sizes matching
     ``sched.n_data`` and ``sched.p``) every wave executes shard-mapped on
     the real mesh and theta is handled as p model shards; ``topology`` is
@@ -160,6 +177,14 @@ def run_streaming_als(
         lambda xb, i, v, c: als_mod.partial_herm(xb, i, v, c, cfg))
     solve_acc_fn = solve_acc_fn or (
         lambda A, B, c: als_mod.solve_accumulated(A, B, c, cfg))
+
+    # degree-binned store: waves stream bin-wise cuts and dispatch the
+    # kernels once per bin at that bin's K (p=1 only — the store enforces it)
+    n_bins = getattr(ratings, "n_bins", 1)
+    binned = n_bins > 1
+    assert not binned or mesh is None, \
+        "binned streaming is p=1 only; build the RatingStore with n_bins=1 " \
+        "to stream on a mesh (see ROADMAP)"
 
     p = 1
     if mesh is not None:
@@ -251,6 +276,8 @@ def run_streaming_als(
             meter.alloc(f"xwave{wave.index}", nb // len(wave.batches))
             reg.counter("padded_slots").inc(trip[0].size)
             reg.counter("nnz_streamed").inc(int(trip[2].sum()))
+            reg.counter("x_padded_slots").inc(trip[0].size)
+            reg.counter("x_nnz_streamed").inc(int(trip[2].sum()))
             dev = tuple(jnp.asarray(a) for a in trip)
             return wave, dev, nb
 
@@ -304,10 +331,12 @@ def run_streaming_als(
             nb = sum(triplet_nbytes(t) + x.nbytes for _, t, x in payload)
             # each simulated device holds ONE batch's shard + X slice
             meter.alloc(f"twave{wave.index}", nb // len(payload))
-            reg.counter("padded_slots").inc(
-                sum(t[0].size for _, t, _x in payload))
-            reg.counter("nnz_streamed").inc(
-                sum(int(t[2].sum()) for _, t, _x in payload))
+            slots = sum(t[0].size for _, t, _x in payload)
+            nz = sum(int(t[2].sum()) for _, t, _x in payload)
+            reg.counter("padded_slots").inc(slots)
+            reg.counter("nnz_streamed").inc(nz)
+            reg.counter("t_padded_slots").inc(slots)
+            reg.counter("t_nnz_streamed").inc(nz)
             dev = [(b, tuple(jnp.asarray(a) for a in t), jnp.asarray(x))
                    for b, t, x in payload]
             return wave, dev, nb
@@ -325,6 +354,116 @@ def run_streaming_als(
                             A = A + Aj
                             B = B + Bj
                             c = c + cnt.astype(jnp.float32)
+                        meter.free(f"twave{wave.index}")
+                        if last:
+                            meter.alloc("theta_out", n * f * 4)
+                            factors.write_slice(
+                                "theta", 0, n,
+                                np.asarray(solve_acc_fn(A, B, c)))
+                            meter.free("theta_out")
+                    reg.counter("waves_run").inc()
+                    reg.counter("batches_loaded").inc(len(payload))
+                    reg.counter("bytes_streamed").inc(nb)
+                    _save(it * wpi + W + wave.index + 1,
+                          acc=None if last else (A, B, c))
+        finally:
+            meter.free("acc")
+
+    # ------------------------------------------------------------------
+    # Binned halves: the same waves cut bin-wise — each wave's rows arrive
+    # as a BinnedELL and the kernels dispatch once per bin at that bin's K.
+    # Padding slots are exact zeros, so the factor trajectory is identical
+    # to the uniform halves'; only the streamed slots/bytes shrink.
+    # ------------------------------------------------------------------
+    def _x_half_binned(it: int, first_wave: int):
+        theta_dev = jnp.asarray(factors.theta)
+        meter.alloc("fixed_theta", factors.theta.nbytes)
+        scratch = (sched.waves[0].rows * (f * f + 2 * f) * 4) // n_data
+
+        def gen():
+            for wave in sched.waves[first_wave:]:
+                yield wave, ratings.x_slice_binned(
+                    wave.row_start, wave.row_stop)
+
+        def put(item):
+            wave, bsl = item
+            nb = binned_nbytes(bsl)
+            meter.alloc(f"xwave{wave.index}", nb // len(wave.batches))
+            reg.counter("padded_slots").inc(int(bsl.padded_slots))
+            reg.counter("nnz_streamed").inc(int(bsl.nnz))
+            reg.counter("x_padded_slots").inc(int(bsl.padded_slots))
+            reg.counter("x_nnz_streamed").inc(int(bsl.nnz))
+            return wave, bsl, nb
+
+        try:
+            with Prefetcher(gen(), depth=prefetch_depth, put=put,
+                            tracer=tracer, registry=reg) as pf:
+                for wave, bsl, nb in pf:
+                    with phase("als.wave_x", cat="solve", tracer=tracer,
+                               registry=reg, wave=wave.index,
+                               iteration=it + 1, bytes=nb, bins=bsl.n_bins):
+                        meter.alloc("x_scratch", scratch)
+                        rows = np.asarray(
+                            als_mod.update_rows_binned(theta_dev, bsl, cfg))
+                        meter.free("x_scratch")
+                        factors.write_slice("x", wave.row_start,
+                                            wave.row_stop, rows)
+                    meter.free(f"xwave{wave.index}")
+                    reg.counter("waves_run").inc()
+                    reg.counter("batches_loaded").inc(len(wave.batches))
+                    reg.counter("bytes_streamed").inc(nb)
+                    _save(it * wpi + wave.index + 1)
+        finally:
+            meter.free("fixed_theta")
+
+    def _theta_half_binned(it: int, first_wave: int, acc0=None):
+        acc_bytes = n * (f * f + f + 1) * 4
+        meter.alloc("acc", acc_bytes)
+        if acc0 is not None:
+            A = jnp.asarray(acc0[0], jnp.float32)
+            B = jnp.asarray(acc0[1], jnp.float32)
+            c = jnp.asarray(acc0[2], jnp.float32)
+        else:
+            A = jnp.zeros((n, f, f), jnp.float32)
+            B = jnp.zeros((n, f), jnp.float32)
+            c = jnp.zeros((n,), jnp.float32)
+
+        def gen():
+            for wave in sched.waves[first_wave:]:
+                payload = [
+                    (b, ratings.theta_batch_binned(b.index),
+                     factors.read_slice("x", b.row_start, b.row_stop))
+                    for b in wave.batches]
+                yield wave, payload
+
+        def put(item):
+            wave, payload = item
+            nb = sum(binned_nbytes(bell) + x.nbytes
+                     for _, bell, x in payload)
+            meter.alloc(f"twave{wave.index}", nb // len(payload))
+            slots = sum(int(bell.padded_slots) for _, bell, _x in payload)
+            nz = sum(int(bell.nnz) for _, bell, _x in payload)
+            reg.counter("padded_slots").inc(slots)
+            reg.counter("nnz_streamed").inc(nz)
+            reg.counter("t_padded_slots").inc(slots)
+            reg.counter("t_nnz_streamed").inc(nz)
+            dev = [(b, bell, jnp.asarray(x)) for b, bell, x in payload]
+            return wave, dev, nb
+
+        try:
+            with Prefetcher(gen(), depth=prefetch_depth, put=put,
+                            tracer=tracer, registry=reg) as pf:
+                for wave, payload, nb in pf:
+                    last = wave.index == W - 1
+                    with phase("als.wave_theta", cat="solve", tracer=tracer,
+                               registry=reg, wave=wave.index,
+                               iteration=it + 1, bytes=nb, bins=n_bins):
+                        for _, bell, x_dev in payload:
+                            Aj, Bj = als_mod.partial_herm_binned(
+                                x_dev, bell, cfg)
+                            A = A + Aj
+                            B = B + Bj
+                            c = c + jnp.asarray(_binned_cnt_rows(bell))
                         meter.free(f"twave{wave.index}")
                         if last:
                             meter.alloc("theta_out", n * f * 4)
@@ -363,6 +502,8 @@ def run_streaming_als(
             meter.alloc(f"xwave{wave.index}", nb // (len(wave.batches) * p))
             reg.counter("padded_slots").inc(idx.size)
             reg.counter("nnz_streamed").inc(int(cnt.sum()))
+            reg.counter("x_padded_slots").inc(idx.size)
+            reg.counter("x_nnz_streamed").inc(int(cnt.sum()))
             pad = full_rows - idx.shape[0]
             if pad:      # ragged last wave: empty rows solve to x_u = 0
                 idx = np.pad(idx, ((0, pad), (0, 0)))
@@ -420,9 +561,12 @@ def run_streaming_als(
             nbatch = len(trips)
             trip_nb = sum(triplet_nbytes(t) for t in trips)
             x_nb = sum(x.nbytes for x in xs)
-            reg.counter("padded_slots").inc(sum(t[0].size for t in trips))
-            reg.counter("nnz_streamed").inc(
-                sum(int(t[2].sum()) for t in trips))
+            slots = sum(t[0].size for t in trips)
+            nz = sum(int(t[2].sum()) for t in trips)
+            reg.counter("padded_slots").inc(slots)
+            reg.counter("nnz_streamed").inc(nz)
+            reg.counter("t_padded_slots").inc(slots)
+            reg.counter("t_nnz_streamed").inc(nz)
             # per device: 1/p of one batch's R^T shard (its theta rows) +
             # the batch's full X slice (replicated over the model axis)
             meter.alloc(f"twave{wave.index}",
@@ -491,24 +635,31 @@ def run_streaming_als(
             factors.write_shard("theta", k, p, np.asarray(th_k))
         meter.free("theta_out")
 
-    x_half = _x_half_mesh if mesh is not None else _x_half
-    theta_half = _theta_half_mesh if mesh is not None else _theta_half
+    x_half = (_x_half_mesh if mesh is not None
+              else _x_half_binned if binned else _x_half)
+    theta_half = (_theta_half_mesh if mesh is not None
+                  else _theta_half_binned if binned else _theta_half)
 
     # ------------------------------------------------------------------
     # Plan side of the ledger: per-wave predictions summed over exactly the
     # waves this run will execute (resume-aware), before any wave streams.
     pstats = predicted_stream_stats(ratings, sched, f)
-    pred = {"bytes": 0, "slots": 0, "nnz": 0, "reduces": 0}
+    pred = {"bytes": 0, "slots": 0, "nnz": 0, "reduces": 0,
+            "x_slots": 0, "x_nnz": 0, "t_slots": 0, "t_nnz": 0}
 
     def _predict_iteration(r: int):
         for wi in range(r if r < W else W, W):          # solve-X half
             pred["bytes"] += pstats["x_bytes"][wi]
             pred["slots"] += pstats["x_slots"][wi]
             pred["nnz"] += pstats["x_nnz"][wi]
+            pred["x_slots"] += pstats["x_slots"][wi]
+            pred["x_nnz"] += pstats["x_nnz"][wi]
         for wi in range(max(0, r - W), W):              # accumulate-Theta
             pred["bytes"] += pstats["t_bytes"][wi]
             pred["slots"] += pstats["t_slots"][wi]
             pred["nnz"] += pstats["t_nnz"][wi]
+            pred["t_slots"] += pstats["t_slots"][wi]
+            pred["t_nnz"] += pstats["t_nnz"][wi]
         if mesh is not None:
             pred["reduces"] += 1         # one Fig. 5b reduce per theta half
 
@@ -565,7 +716,7 @@ def run_streaming_als(
     # made for this run, confronted with what the meters measured.
     led = Ledger(solver="als", mesh=mesh is not None, p=p,
                  n_data=n_data, waves=W, iterations=cfg.iters - it0,
-                 f=f, m_pad=m_pad, n=n, mode=cfg.mode,
+                 f=f, m_pad=m_pad, n=n, mode=cfg.mode, n_bins=n_bins,
                  resumed_from_step=start_step, topology=topo_desc,
                  phase_seconds=reg.phase_seconds())
     led.record("peak_device_bytes", sched.capacity_bytes, meter.peak_bytes,
@@ -587,6 +738,23 @@ def run_streaming_als(
     led.record("worst_fill_bound", ratings.worst_fill,
                meas_slots / meas_nnz if meas_nnz else 0.0,
                unit="ratio", check="le")
+    # per-half fill attribution: each streamed orientation pays only its own
+    # padding (ISSUE 9 satellite — the old worst_fill max smeared them)
+    mxs = int(reg.counter("x_padded_slots").value)
+    mxn = int(reg.counter("x_nnz_streamed").value)
+    mts = int(reg.counter("t_padded_slots").value)
+    mtn = int(reg.counter("t_nnz_streamed").value)
+    led.record("fill/solve_x",
+               pred["x_slots"] / pred["x_nnz"] if pred["x_nnz"] else 0.0,
+               mxs / mxn if mxn else 0.0,
+               unit="ratio", check="rel", rel_tol=1e-9)
+    led.record("fill/accumulate_theta",
+               pred["t_slots"] / pred["t_nnz"] if pred["t_nnz"] else 0.0,
+               mts / mtn if mtn else 0.0,
+               unit="ratio", check="rel", rel_tol=1e-9)
+    for comp, fb in ratings.fill_breakdown().items():
+        led.record(f"fill_bound/{comp}", ratings.worst_fill, fb,
+                   unit="ratio", check="le")
     if mesh is not None:
         led.record("reduce_fast_bytes",
                    pred["reduces"] * topo_traffic["fast_link_bytes"],

@@ -36,6 +36,8 @@ from __future__ import annotations
 import dataclasses
 from typing import Optional, Tuple
 
+import numpy as np
+
 from repro.core.partition import GiB, PartitionPlan, QBatch, export_schedule
 
 
@@ -263,23 +265,56 @@ def required_capacity_bytes(store, sched: IterationSchedule, f: int,
     of the p-partitioned slice; only the fresh X slice of the accumulate
     half stays replicated across the model axis (every shard's partial
     Hermitian reads the whole batch).
+
+    A degree-binned store (``n_bins > 1``, p = 1 only) streams bin-wise
+    cuts: per-wave payloads vary with where each bin's rows fall, so the
+    model bounds every wave by the maximum per-batch payload — still
+    ``le`` vs the meter, and never above the uniform-K model.
     """
     n_data, p = sched.n_data, sched.p
     wave_rows = sched.waves[0].rows
     bufs = prefetch_depth + 2
+    binned = getattr(store, "r_binned", None) is not None
     # solve-X half: resident Theta shard + wave triplets + solve scratch
     theta_bytes = store.n * f * 4 // p
-    K = store.r.K if p == 1 else store.r_model_parts.idx.shape[-1]
-    x_payload = (wave_rows * (K * 8 + 4)) // n_data
+    if binned:
+        x_payload = max(
+            _binned_span_bytes(store.r_binned, w.row_start, w.row_stop)
+            // len(w.batches)
+            for w in sched.waves)
+    else:
+        K = store.r.K if p == 1 else store.r_model_parts.idx.shape[-1]
+        x_payload = (wave_rows * (K * 8 + 4)) // n_data
     x_scratch = (wave_rows * (f * f + 2 * f) * 4) // n_data
     x_half = theta_bytes + bufs * x_payload + x_scratch
     # accumulate-Theta half: resident A/B/c shard + per-batch R^T rows of
     # the owned theta shard + the batch's (replicated) X slice
     q, n, K_loc = store.rt_parts.idx.shape
     acc_bytes = n * (f * f + f + 1) * 4 // p
-    t_payload = n * (K_loc * 8 + 4) // p + (sched.m_pad // q) * f * 4
+    if binned:
+        from repro.outofcore.store import binned_nbytes
+        t_payload = max(binned_nbytes(b) for b in store.rt_binned) \
+            + (sched.m_pad // q) * f * 4
+    else:
+        t_payload = n * (K_loc * 8 + 4) // p + (sched.m_pad // q) * f * 4
     t_half = acc_bytes + bufs * t_payload + n * f * 4 // p
     return max(x_half, t_half)
+
+
+def _binned_span_bytes(binned, start: int, stop: int) -> int:
+    """Triplet bytes of original rows ``[start, stop)`` cut bin-wise: each
+    bin contributes its span's rows at that bin's own K (idx + val slots
+    at 8 bytes, cnt at 4) — exactly what ``x_slice_binned`` materializes."""
+    return sum((hi - lo) * (b.K * 8 + 4)
+               for b, (lo, hi) in zip(binned.bins,
+                                      binned.bin_spans(start, stop)))
+
+
+def _binned_span_slots(binned, start: int, stop: int) -> int:
+    """Padded ELL slots of the same bin-wise cut."""
+    return sum((hi - lo) * b.K
+               for b, (lo, hi) in zip(binned.bins,
+                                      binned.bin_spans(start, stop)))
 
 
 # ---------------------------------------------------------------------------
@@ -302,51 +337,81 @@ def predicted_stream_stats(store, sched: IterationSchedule, f: int) -> dict:
     ragged last waves and mid-iteration resume: the driver sums exactly
     the waves it executes.  On a ``p > 1`` schedule the solve-X side uses
     the mesh triplet layout (``x_slice_mesh_triplet``'s pre-padding
-    shapes).
+    shapes).  On a degree-binned store the per-wave numbers sum each bin's
+    contiguous span at that bin's own K (``x_slice_binned`` /
+    ``theta_batch_binned``'s exact shapes) — still exact integers, so the
+    ledger's ``fill_waste_ratio`` stays an equality under binning.
     """
     p = sched.p
-    if p == 1:
-        K = store.r.K
-        per_row_bytes = K * 8 + 4             # idx + val slots, cnt
-        per_row_slots = K
-    else:
-        K_loc = store.r_model_parts.idx.shape[-1]
-        per_row_bytes = p * (K_loc * 8 + 4)   # [rows, p*K_loc] x2 + [rows, p]
-        per_row_slots = p * K_loc
+    binned = getattr(store, "r_binned", None) is not None
     cnt_rows = store.r.cnt                    # [m_pad], padded rows cnt = 0
     x_bytes, x_slots, x_nnz = [], [], []
-    for w in sched.waves:
-        x_bytes.append(w.rows * per_row_bytes)
-        x_slots.append(w.rows * per_row_slots)
-        x_nnz.append(int(cnt_rows[w.row_start:w.row_stop].sum()))
+    if binned:
+        for w in sched.waves:
+            x_bytes.append(_binned_span_bytes(
+                store.r_binned, w.row_start, w.row_stop))
+            x_slots.append(_binned_span_slots(
+                store.r_binned, w.row_start, w.row_stop))
+            x_nnz.append(int(cnt_rows[w.row_start:w.row_stop].sum()))
+    else:
+        if p == 1:
+            K = store.r.K
+            per_row_bytes = K * 8 + 4         # idx + val slots, cnt
+            per_row_slots = K
+        else:
+            K_loc = store.r_model_parts.idx.shape[-1]
+            per_row_bytes = p * (K_loc * 8 + 4)  # [rows, p*K_loc] x2 + [rows, p]
+            per_row_slots = p * K_loc
+        for w in sched.waves:
+            x_bytes.append(w.rows * per_row_bytes)
+            x_slots.append(w.rows * per_row_slots)
+            x_nnz.append(int(cnt_rows[w.row_start:w.row_stop].sum()))
     q, n, K_t = store.rt_parts.idx.shape
-    batch_trip = n * (K_t * 8 + 4)            # one R^T shard's triplet
     t_bytes, t_slots, t_nnz = [], [], []
-    for w in sched.waves:
-        t_bytes.append(sum(
-            batch_trip + (b.row_stop - b.row_start) * f * 4
-            for b in w.batches))
-        t_slots.append(len(w.batches) * n * K_t)
-        t_nnz.append(sum(int(store.rt_parts.cnt[b.index].sum())
-                         for b in w.batches))
+    if binned:
+        from repro.outofcore.store import binned_nbytes
+        shard_bytes = [binned_nbytes(b) for b in store.rt_binned]
+        shard_slots = [int(b.padded_slots) for b in store.rt_binned]
+        for w in sched.waves:
+            t_bytes.append(sum(
+                shard_bytes[b.index] + (b.row_stop - b.row_start) * f * 4
+                for b in w.batches))
+            t_slots.append(sum(shard_slots[b.index] for b in w.batches))
+            t_nnz.append(sum(int(store.rt_parts.cnt[b.index].sum())
+                             for b in w.batches))
+    else:
+        batch_trip = n * (K_t * 8 + 4)        # one R^T shard's triplet
+        for w in sched.waves:
+            t_bytes.append(sum(
+                batch_trip + (b.row_stop - b.row_start) * f * 4
+                for b in w.batches))
+            t_slots.append(len(w.batches) * n * K_t)
+            t_nnz.append(sum(int(store.rt_parts.cnt[b.index].sum())
+                             for b in w.batches))
     return {"x_bytes": x_bytes, "x_slots": x_slots, "x_nnz": x_nnz,
             "t_bytes": t_bytes, "t_slots": t_slots, "t_nnz": t_nnz}
 
 
 def predicted_sgd_stream_stats(tiles, sched: SgdEpochSchedule) -> dict:
-    """Plan-side per-tile streaming constants for the SGD ledger.
+    """Plan-side per-tile streaming stats for the SGD ledger.
 
-    Every streamed tile moves the same bytes — its ELL triplet
-    (``sgd_tile_bytes``) plus the two factor blocks the driver fetches
-    synchronously and the measured counter includes — and the same padded
-    slot count; only the true nnz varies per tile, so that comes back as
-    the ``[g, g]`` per-tile matrix from the grid's host-resident cnt.
-    The driver sums these over exactly the (possibly resumed-into,
-    per-epoch-permuted) waves it executes.
+    All three come back as ``[g, g]`` per-tile matrices: ``tile_bytes``
+    is the tile's ELL triplet (``sgd_tile_bytes`` at the tile's own K on
+    a per-tile-binned grid, the grid-wide K otherwise) plus the two
+    factor blocks the driver fetches synchronously and the measured
+    counter includes; ``tile_slots`` the padded slots the tile's kernel
+    shape dispatches; ``tile_nnz`` the true ratings from the grid's
+    host-resident cnt.  The driver sums these over exactly the (possibly
+    resumed-into, per-epoch-permuted) waves it executes — on a uniform
+    grid every entry is the same constant, so the sums are unchanged.
     """
     mb, nb, K, f = sched.mb, sched.nb, sched.K, sched.f
+    g = sched.g
+    grid = tiles.grid
+    tk = (np.full((g, g), K, dtype=np.int64) if grid.tile_K is None
+          else grid.tile_K.astype(np.int64))
     return {
-        "tile_bytes": sgd_tile_bytes(mb, K) + (mb + nb) * f * 4,
-        "tile_slots": mb * K,
-        "tile_nnz": tiles.grid.cnt.sum(axis=-1),   # [g, g]
+        "tile_bytes": mb * tk * 8 + mb * 4 + (mb + nb) * f * 4,  # [g, g]
+        "tile_slots": mb * tk,                                   # [g, g]
+        "tile_nnz": tiles.grid.cnt.sum(axis=-1),                 # [g, g]
     }

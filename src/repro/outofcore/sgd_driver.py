@@ -18,7 +18,10 @@ instead of holding the grid resident.  Per epoch the driver:
 - stacks the wave's tiles into ONE ``sgd_block_update`` dispatch (tiles of
   a set are disjoint in both factors — the same stacking as the in-core
   scan epoch) and writes the updated blocks straight back to the host
-  ``FactorStore``;
+  ``FactorStore``; on a per-tile-K grid (degree binning at tile
+  granularity) the wave instead splits into same-K ladder groups, one
+  stacked dispatch per group — still exact, since a wave's tiles are
+  mutually disjoint in both factors;
 - commits resumable state (factors + global wave step) through
   ``checkpoint.CheckpointManager`` after every wave, so a killed run
   restarts mid-epoch.
@@ -153,8 +156,9 @@ def run_streaming_sgd(
         ckpt.save(step, lambda: {"x": factors.x.copy(),
                                  "theta": factors.theta.copy()})
 
-    # Plan side of the ledger: every tile moves the same bytes/slots, only
-    # nnz varies; summed over exactly the waves each epoch will execute.
+    # Plan side of the ledger: per-tile [g, g] bytes/slots/nnz matrices
+    # (constant entries on a uniform grid, per-tile K when binned), summed
+    # over exactly the waves each epoch will execute.
     pst = predicted_sgd_stream_stats(tiles, sched)
     pred = {"bytes": 0, "slots": 0, "nnz": 0}
 
@@ -163,8 +167,10 @@ def run_streaming_sgd(
         order = np.asarray(epoch_set_order(cfg.seed, ep, g))
         waves = sched.epoch_waves(order)
         for wave in waves[first_wave:]:
-            pred["bytes"] += len(wave.tiles) * pst["tile_bytes"]
-            pred["slots"] += len(wave.tiles) * pst["tile_slots"]
+            pred["bytes"] += sum(int(pst["tile_bytes"][i][j])
+                                 for i, j in wave.tiles)
+            pred["slots"] += sum(int(pst["tile_slots"][i][j])
+                                 for i, j in wave.tiles)
             pred["nnz"] += sum(int(pst["tile_nnz"][i][j])
                                for i, j in wave.tiles)
 
@@ -181,14 +187,25 @@ def run_streaming_sgd(
             reg.counter("padded_slots").inc(sum(t[0].size for t in trips))
             reg.counter("nnz_streamed").inc(
                 sum(int(t[2].sum()) for t in trips))
-            dev = (_place(np.stack([t[0] for t in trips])),
-                   _place(np.stack([t[1] for t in trips])),
-                   _place(np.stack([t[2] for t in trips])))
-            return wave, dev, payload
+            # same-K tiles stack into one dispatch; a per-tile-K grid's
+            # wave splits into a few ladder groups (one group — the whole
+            # wave, today's single dispatch — when the grid is uniform).
+            # Groups of one wave touch disjoint blocks, so running them
+            # back to back is exact.
+            groups = []
+            for k_t in sorted({t[0].shape[-1] for t in trips}):
+                sel = [c for c, t in enumerate(trips)
+                       if t[0].shape[-1] == k_t]
+                groups.append((
+                    sel,
+                    _place(np.stack([trips[c][0] for c in sel])),
+                    _place(np.stack([trips[c][1] for c in sel])),
+                    _place(np.stack([trips[c][2] for c in sel]))))
+            return wave, groups, payload
 
         with Prefetcher(gen(), depth=prefetch_depth, put=put,
                         tracer=tracer, registry=reg) as pf:
-            for wave, (idx_d, val_d, cnt_d), payload in pf:
+            for wave, groups, payload in pf:
                 t = len(wave.tiles)
                 with phase("sgd.wave", cat="solve", tracer=tracer,
                            registry=reg, wave=wave.index, epoch=ep + 1,
@@ -204,23 +221,26 @@ def run_streaming_sgd(
                         factors.read_slice("theta", j * nb, (j + 1) * nb)
                         for _, j in wave.tiles])
                     meter.alloc(f"fac_out{wave.index}", fac_bytes)
-                    # the wave's disjoint tiles stack into one dispatch —
-                    # the same sgd_tiles_update the in-core scan epoch
-                    # uses, which is what keeps streaming == in-core
-                    # parity exact; on a mesh the stack is sharded one
-                    # tile per device, so the padded no-op tiles ride
-                    # along and are discarded below
-                    x_new, t_new = sgd_tiles_update(
-                        _place(x_host), _place(th_host), idx_d,
-                        val_d, cnt_d, lr_t, cfg.lam, mode=cfg.mode,
-                        row_mult=cfg.row_mult, col_mult=cfg.col_mult,
-                        f_mult=cfg.f_mult)
-                    x_np, t_np = np.asarray(x_new), np.asarray(t_new)
-                    for k, (i, j) in enumerate(wave.tiles):
-                        factors.write_slice("x", i * mb, (i + 1) * mb,
-                                            x_np[k])
-                        factors.write_slice("theta", j * nb, (j + 1) * nb,
-                                            t_np[k])
+                    # each same-K group's disjoint tiles stack into one
+                    # dispatch — the same sgd_tiles_update the in-core
+                    # epoch uses, which is what keeps streaming == in-core
+                    # parity exact; a uniform grid has exactly one group
+                    # (the whole wave, today's single dispatch); on a mesh
+                    # the stack is sharded one tile per device, so the
+                    # padded no-op tiles ride along and are discarded below
+                    for sel, idx_d, val_d, cnt_d in groups:
+                        x_new, t_new = sgd_tiles_update(
+                            _place(x_host[sel]), _place(th_host[sel]),
+                            idx_d, val_d, cnt_d, lr_t, cfg.lam,
+                            mode=cfg.mode, row_mult=cfg.row_mult,
+                            col_mult=cfg.col_mult, f_mult=cfg.f_mult)
+                        x_np, t_np = np.asarray(x_new), np.asarray(t_new)
+                        for k, c in enumerate(sel):
+                            i, j = wave.tiles[c]
+                            factors.write_slice("x", i * mb, (i + 1) * mb,
+                                                x_np[k])
+                            factors.write_slice("theta", j * nb,
+                                                (j + 1) * nb, t_np[k])
                     meter.free(f"fac_out{wave.index}")
                     meter.free(f"fac_in{wave.index}")
                     meter.free(f"tilewave{wave.index}")
@@ -249,7 +269,12 @@ def run_streaming_sgd(
                        for cat, s in ph1.items()
                        if s - ph0.get(cat, 0.0) > 0.0}}
             if train_eval is not None or test_eval is not None:
-                x_dev = jnp.asarray(factors.x[:m])
+                # degree-sorted grids store X rows permuted; evaluation is
+                # in original user coordinates
+                if tiles.grid.user_perm is not None:
+                    x_dev = jnp.asarray(factors.x[tiles.grid.user_inv])
+                else:
+                    x_dev = jnp.asarray(factors.x[:m])
                 t_dev = jnp.asarray(factors.theta[:n])
                 if test_eval is not None:
                     rec["test_rmse"] = float(
@@ -271,6 +296,8 @@ def run_streaming_sgd(
     led = Ledger(solver="sgd", mesh=mesh is not None, g=g, mb=mb, nb=nb,
                  f=f, n_workers=sched.n_workers,
                  epochs=cfg.epochs - ep0, mode=cfg.mode,
+                 per_tile_k=tiles.grid.tile_K is not None,
+                 degree_sorted=tiles.grid.user_perm is not None,
                  resumed_from_step=start_step,
                  phase_seconds=reg.phase_seconds())
     led.record("peak_device_bytes", sched.capacity_bytes, meter.peak_bytes,

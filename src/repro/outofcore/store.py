@@ -9,6 +9,15 @@ the shapes the wave driver streams:
   user-batches (``partition_padded``), one ``[n, K_loc]`` shard per batch
   with batch-local user coordinates, for the accumulate-Theta half.
 
+With ``n_bins > 1`` both orientations additionally carry degree-binned
+shards (``r_binned``, one ``BinnedELL`` per R^T user-batch in
+``rt_binned``): the wave driver streams each wave's rows cut bin-wise
+(``x_slice_binned`` / ``theta_batch_binned``) so heavy rows pay a large K
+and light rows a small one — cuMF's degree binning applied to the
+streaming layout.  Binned stores are p=1 only for now: mesh streaming
+stacks theta-half shards ``[n_data, n, K]``, which needs batch-uniform
+item bins (see ROADMAP).
+
 Factors live in ``FactorStore`` as plain numpy arrays; the driver reads
 slices onto device and writes solved slices back, so device memory only ever
 holds the resident factor plus the streaming wave buffers.
@@ -20,8 +29,9 @@ from typing import Tuple
 
 import numpy as np
 
-from repro.sparse.padded import (PaddedELL, csr_from_coo, pad_csr_fast,
-                                 pad_rows, partition_padded, row_slice)
+from repro.sparse.padded import (BinnedELL, PaddedELL, bin_padded,
+                                 csr_from_coo, pad_csr_fast, pad_rows,
+                                 partition_padded, row_slice)
 
 Triplet = Tuple[np.ndarray, np.ndarray, np.ndarray]
 
@@ -37,6 +47,12 @@ def _triplet(ell: PaddedELL) -> Triplet:
 
 def triplet_nbytes(t: Triplet) -> int:
     return sum(int(a.nbytes) for a in t)
+
+
+def binned_nbytes(binned: BinnedELL) -> int:
+    """Streamed bytes of a BinnedELL's per-bin triplets (idx + val + cnt)."""
+    return sum(int(b.idx.nbytes + b.val.nbytes + b.cnt.nbytes)
+               for b in binned.bins)
 
 
 @dataclasses.dataclass
@@ -94,14 +110,25 @@ class RatingStore:
     rows to ``m_pad`` (the next multiple of q) so every batch — and therefore
     every wave buffer — has identical shape; padded rows carry cnt = 0 and
     solve to x_u = 0 without touching Theta.
+
+    ``n_bins > 1`` additionally materializes degree-binned shards of both
+    orientations (``bin_padded`` re-bins the uniform layouts in place, no
+    COO round trip): the driver then streams each wave bin-wise through
+    ``x_slice_binned`` / ``theta_batch_binned``, cutting padded slots from
+    ``fill`` x nnz down to the per-bin sum.  Requires ``p == 1``.
     """
 
-    def __init__(self, r: PaddedELL, q: int, k_multiple: int = 8, p: int = 1):
-        assert q >= 1 and p >= 1
+    def __init__(self, r: PaddedELL, q: int, k_multiple: int = 8, p: int = 1,
+                 n_bins: int = 1):
+        assert q >= 1 and p >= 1 and n_bins >= 1
+        assert p == 1 or n_bins == 1, \
+            "binned mesh streaming is not supported yet (see ROADMAP): " \
+            "theta-half mesh stacking needs batch-uniform item bins"
         self.m = r.m                       # true (unpadded) user count
         self.n = r.n_cols                  # item count
         self.q = q
         self.p = p
+        self.n_bins = n_bins
         self.m_pad = -(-r.m // q) * q
         self.r = pad_rows(r, self.m_pad)   # rows = users, global item idx
         # R^T with n_cols = m_pad, column-partitioned into the q user-batches:
@@ -120,6 +147,24 @@ class RatingStore:
         self.r_model_parts = (partition_padded(self.r, p,
                                                k_multiple=k_multiple)
                               if p > 1 else None)
+        # n_bins > 1: degree-binned shards of both orientations.  r_binned
+        # keeps m_pad rows (empty padding rows land in the smallest bin),
+        # rt_binned holds one BinnedELL per R^T user-batch — each shard
+        # re-binned independently because its item degrees are batch-local.
+        if n_bins > 1:
+            self.r_binned = bin_padded(self.r, n_bins, k_multiple=k_multiple)
+            self.rt_binned = tuple(
+                bin_padded(self._rt_shard(j), n_bins, k_multiple=k_multiple)
+                for j in range(q))
+        else:
+            self.r_binned = None
+            self.rt_binned = None
+
+    def _rt_shard(self, j: int) -> PaddedELL:
+        """R^T shard of user-batch ``j`` as a standalone PaddedELL view."""
+        return PaddedELL(idx=self.rt_parts.idx[j], val=self.rt_parts.val[j],
+                         cnt=self.rt_parts.cnt[j],
+                         n_cols=self.m_pad // self.q)
 
     @property
     def nnz(self) -> int:
@@ -127,7 +172,11 @@ class RatingStore:
 
     @property
     def fill_r(self) -> float:
-        """Padding overhead of the row-major orientation (solve-X waves)."""
+        """Padding overhead of the row-major orientation (solve-X waves):
+        per-bin padded slots over nnz when binned, uniform-K fill otherwise.
+        """
+        if self.r_binned is not None:
+            return self.r_binned.fill
         return self.r.fill
 
     @property
@@ -136,6 +185,9 @@ class RatingStore:
         ``fill_r`` on power-law data: every item row pads to the max in-batch
         item degree — feed this to ``plan_for(fill=...)`` so the eq. (8)
         budget prices what the driver actually streams."""
+        if self.rt_binned is not None:
+            slots = sum(b.padded_slots for b in self.rt_binned)
+            return float(slots) / max(self.nnz, 1)
         q, n, K_loc = self.rt_parts.idx.shape
         return float(q * n * K_loc) / max(self.nnz, 1)
 
@@ -152,6 +204,33 @@ class RatingStore:
     def worst_fill(self) -> float:
         return max(self.fill_r, self.fill_rt, self.fill_r_model)
 
+    def fill_breakdown(self) -> dict:
+        """Per-component padding fills, keyed like the ledger records them.
+
+        ``worst_fill`` is the max over these — the bound fed to
+        ``plan_for(fill=...)`` — but each streamed component pays only its
+        own fill, so the ledger records every component separately instead
+        of letting one bad orientation smear the others (the old
+        ``fill``/``worst_fill`` asymmetry).
+        """
+        out = {"r": self.fill_r, "rt": self.fill_rt}
+        if self.r_model_parts is not None:
+            out["r_model"] = self.fill_r_model
+        return out
+
+    def bin_fill_pairs(self) -> list:
+        """Per-bin ``(padded_slots, nnz)`` of the worst-fill orientation —
+        the ``plan_for(bin_fills=...)`` pricing input.  Requires a binned
+        store; their aggregate equals ``worst_fill``, so the planner prices
+        exactly the binned bytes the driver streams."""
+        assert self.r_binned is not None, \
+            "RatingStore was built with n_bins=1; pass n_bins to price bins"
+        if self.fill_r >= self.fill_rt:
+            src = self.r_binned.bins
+        else:
+            src = [bb for b in self.rt_binned for bb in b.bins]
+        return [(int(b.padded_slots), int(b.nnz)) for b in src]
+
     @property
     def host_nbytes(self) -> int:
         total = int(self.r.idx.nbytes + self.r.val.nbytes + self.r.cnt.nbytes
@@ -161,11 +240,23 @@ class RatingStore:
             total += int(self.r_model_parts.idx.nbytes
                          + self.r_model_parts.val.nbytes
                          + self.r_model_parts.cnt.nbytes)
+        if self.r_binned is not None:
+            total += binned_nbytes(self.r_binned)
+            total += sum(binned_nbytes(b) for b in self.rt_binned)
         return total
 
     def x_slice_triplet(self, row_start: int, row_stop: int) -> Triplet:
         """R rows for one solve-X wave slice (global item indices)."""
         return _triplet(row_slice(self.r, row_start, row_stop))
+
+    def x_slice_binned(self, row_start: int, row_stop: int) -> BinnedELL:
+        """R rows for one solve-X wave slice, cut bin-wise: a BinnedELL
+        whose per-bin rows are slice-local (congruent bin structure across
+        waves — every wave carries all bins, possibly empty).  Requires the
+        store to have been built with ``n_bins > 1``."""
+        assert self.r_binned is not None, \
+            "RatingStore was built with n_bins=1; pass n_bins to bin waves"
+        return self.r_binned.row_slice(row_start, row_stop)
 
     def x_slice_mesh_triplet(self, row_start: int, row_stop: int) -> Triplet:
         """R rows for one solve-X wave slice in the ``shard_ratings`` mesh
@@ -198,6 +289,15 @@ class RatingStore:
         return (self.rt_parts.idx[j].astype(np.int32, copy=False),
                 self.rt_parts.val[j].astype(np.float32, copy=False),
                 self.rt_parts.cnt[j].astype(np.int32, copy=False))
+
+    def theta_batch_binned(self, j: int) -> BinnedELL:
+        """Degree-binned R^T shard of user-batch ``j`` (batch-local user
+        indices, item rows grouped by in-batch degree).  Host views — the
+        binned shards are precomputed at store build."""
+        assert self.rt_binned is not None, \
+            "RatingStore was built with n_bins=1; pass n_bins to bin shards"
+        assert 0 <= j < self.q, (j, self.q)
+        return self.rt_binned[j]
 
 
 class TileStore:
@@ -247,10 +347,17 @@ class TileStore:
         return int(self.grid.idx.nbytes + self.grid.val.nbytes
                    + self.grid.cnt.nbytes)
 
+    def tile_k(self, i: int, j: int) -> int:
+        return self.grid.tile_k(i, j)
+
     def tile_triplet(self, i: int, j: int) -> Triplet:
         """Tile (i, j)'s (idx, val, cnt) as host views (no copy — the
-        driver only reads them to stage device transfers)."""
+        driver only reads them to stage device transfers).  On a per-tile-K
+        grid the slot axis is sliced to the tile's own K: the trailing
+        columns are all-padding, so the cut is exact and the wave streams
+        only the slots its kernel shape dispatches."""
         assert 0 <= i < self.g and 0 <= j < self.g, (i, j, self.g)
-        return (self.grid.idx[i, j].astype(np.int32, copy=False),
-                self.grid.val[i, j].astype(np.float32, copy=False),
+        k = self.grid.tile_k(i, j)
+        return (self.grid.idx[i, j, :, :k].astype(np.int32, copy=False),
+                self.grid.val[i, j, :, :k].astype(np.float32, copy=False),
                 self.grid.cnt[i, j].astype(np.int32, copy=False))

@@ -56,6 +56,19 @@ class BlockGrid:
     g: int
     m: int
     n: int
+    #: per-tile kernel K [g, g] int32, on the quantized ladder of
+    #: ``tile_k_ladder`` (degree binning at tile granularity: tile (i, j)
+    #: dispatches/streams only its first tile_K[i,j] slot columns — the
+    #: trailing columns are all-padding and masked, so slicing them off is
+    #: exact).  None = uniform grid-wide K (today's layout, the default).
+    tile_K: np.ndarray | None = None
+    #: degree-sort row permutation [m] int64: ``user_perm[k]`` = original
+    #: user id stored at grid row k (heavy users first, so they concentrate
+    #: in few user blocks and most tiles earn a small tile_K — cuMF's
+    #: degree binning applied at grid granularity).  None = identity.
+    #: Factors inside the grid live in PERMUTED row order; map back with
+    #: ``user_inv`` before any global-coordinate evaluation.
+    user_perm: np.ndarray | None = None
 
     @property
     def mb(self) -> int:
@@ -74,13 +87,36 @@ class BlockGrid:
         return int(self.cnt.sum())
 
     @property
+    def padded_slots(self) -> int:
+        """Slots the kernels actually touch: per-tile K when binned."""
+        if self.tile_K is None:
+            return self.g * self.g * self.mb * self.K
+        return int(self.mb * int(self.tile_K.sum()))
+
+    @property
     def fill(self) -> float:
-        """Stored slots / true nonzeros across the whole grid (>= 1)."""
-        return float(self.g * self.g * self.mb * self.K) / max(self.nnz, 1)
+        """Dispatched slots / true nonzeros across the whole grid (>= 1);
+        respects ``tile_K`` so the binned grid prices its real traffic."""
+        return float(self.padded_slots) / max(self.nnz, 1)
+
+    def tile_k(self, i: int, j: int) -> int:
+        return self.K if self.tile_K is None else int(self.tile_K[i, j])
+
+    @property
+    def user_inv(self) -> np.ndarray:
+        """[m] int64: grid row holding each original user (inverse of
+        ``user_perm``; identity when the grid is unsorted)."""
+        if self.user_perm is None:
+            return np.arange(self.m, dtype=np.int64)
+        inv = np.empty(self.m, dtype=np.int64)
+        inv[self.user_perm] = np.arange(self.m, dtype=np.int64)
+        return inv
 
     def block(self, i: int, j: int) -> PaddedELL:
-        """Tile (i, j) as a standalone block-local PaddedELL."""
-        return PaddedELL(idx=self.idx[i, j], val=self.val[i, j],
+        """Tile (i, j) as a standalone block-local PaddedELL, sliced to the
+        tile's own K when the grid is per-tile binned."""
+        k = self.tile_k(i, j)
+        return PaddedELL(idx=self.idx[i, j, :, :k], val=self.val[i, j, :, :k],
                          cnt=self.cnt[i, j], n_cols=self.nb)
 
     def to_coo(self) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
@@ -92,19 +128,55 @@ class BlockGrid:
                 rows.append(r + i * self.mb)
                 cols.append(c + j * self.nb)
                 vals.append(v)
-        return (np.concatenate(rows), np.concatenate(cols),
-                np.concatenate(vals))
+        out_rows = np.concatenate(rows)
+        if self.user_perm is not None:
+            out_rows = self.user_perm[out_rows]
+        return (out_rows, np.concatenate(cols), np.concatenate(vals))
+
+
+def tile_k_ladder(k: int, k_multiple: int = 8) -> int:
+    """Quantize a tile's K up to the ``k_multiple * 2^j`` ladder.
+
+    Per-tile K values land on a geometric ladder so a g x g grid compiles
+    at most O(log(Kmax/k_multiple)) distinct kernel shapes per set instead
+    of up to g — the same bounded-shapes argument as ``bin_caps`` on the
+    ALS side, specialized to power-of-two rungs.
+    """
+    rung = k_multiple
+    while rung < k:
+        rung *= 2
+    return rung
 
 
 def block_coo(rows: np.ndarray, cols: np.ndarray, vals: np.ndarray,
-              m: int, n: int, g: int, k_multiple: int = 8) -> BlockGrid:
+              m: int, n: int, g: int, k_multiple: int = 8,
+              per_tile_k: bool = False,
+              degree_sort: bool = False) -> BlockGrid:
     """Partition a rating COO into a g x g BlockGrid.
 
     Block sizes are ``mb = ceil(m/g)`` users x ``nb = ceil(n/g)`` items;
     every tile is CSR-sorted and ELL-padded through the shared sparse
     stack, then K-padded to the grid maximum for a uniform kernel shape.
+    With ``per_tile_k`` the grid additionally records each tile's own
+    ladder-quantized K (``tile_K``): storage stays one [g, g, mb, Kmax]
+    array, but kernels and the streaming driver slice each tile to its
+    tight K — cuMF's degree binning at item-block granularity.
+    ``degree_sort`` additionally assigns users to blocks in descending
+    degree order (recorded in ``user_perm``): without it heavy users
+    scatter into every block and each tile's K stays near the global max;
+    with it the heavy tail concentrates in the leading blocks and
+    ``per_tile_k`` gets its multi-x fill win on power-law data.  Sorting
+    re-partitions the grid, so it changes the (still-exact) Hogwild visit
+    order — equivalent training, not a bit-identical trajectory.
     """
     assert g >= 1
+    user_perm = None
+    if degree_sort:
+        deg = np.bincount(rows, minlength=m)
+        user_perm = np.argsort(-deg, kind="stable").astype(np.int64)
+        inv = np.empty(m, dtype=np.int64)
+        inv[user_perm] = np.arange(m, dtype=np.int64)
+        rows = inv[rows]
     mb = -(-m // g)
     nb = -(-n // g)
     bi = rows // mb            # user block of each nonzero
@@ -131,18 +203,25 @@ def block_coo(rows: np.ndarray, cols: np.ndarray, vals: np.ndarray,
     idx = np.zeros((g, g, mb, kmax), dtype=np.int32)
     val = np.zeros((g, g, mb, kmax), dtype=np.float32)
     cnt = np.zeros((g, g, mb), dtype=np.int32)
+    tile_K = np.zeros((g, g), dtype=np.int32) if per_tile_k else None
     for i in range(g):
         for j in range(g):
             e = tiles[i][j]
             idx[i, j, :, :e.K] = e.idx
             val[i, j, :, :e.K] = e.val
             cnt[i, j] = e.cnt
-    return BlockGrid(idx=idx, val=val, cnt=cnt, g=g, m=m, n=n)
+            if tile_K is not None:
+                tile_K[i, j] = min(tile_k_ladder(e.K, k_multiple), kmax)
+    return BlockGrid(idx=idx, val=val, cnt=cnt, g=g, m=m, n=n,
+                     tile_K=tile_K, user_perm=user_perm)
 
 
-def block_ell(ell: PaddedELL, g: int, k_multiple: int = 8) -> BlockGrid:
+def block_ell(ell: PaddedELL, g: int, k_multiple: int = 8,
+              per_tile_k: bool = False,
+              degree_sort: bool = False) -> BlockGrid:
     """Blocked view of an existing row-major PaddedELL (the ALS layout) —
     the shard-sharing entry point the hybrid driver uses."""
     rows, cols, vals = ell_to_coo(ell)
     return block_coo(rows, cols, vals, ell.m, ell.n_cols, g,
-                     k_multiple=k_multiple)
+                     k_multiple=k_multiple, per_tile_k=per_tile_k,
+                     degree_sort=degree_sort)

@@ -33,10 +33,15 @@ def sgd_state_from_als(als_state: als_mod.AlsState,
 
     Padding rows (users/items beyond the true m/n) carry no ratings in
     any tile, so they are never touched by an epoch — the SGD trajectory
-    starts exactly at the ALS iterate.
+    starts exactly at the ALS iterate.  A degree-sorted grid stores user
+    rows permuted, so the ALS factors (original order) are permuted into
+    grid order on the way in.
     """
+    x = jnp.asarray(als_state.x)
+    if grid.user_perm is not None:
+        x = jnp.take(x, jnp.asarray(grid.user_perm), axis=0)
     return SgdState(
-        x=pad_factor(jnp.asarray(als_state.x), grid.g * grid.mb),
+        x=pad_factor(x, grid.g * grid.mb),
         theta=pad_factor(jnp.asarray(als_state.theta), grid.g * grid.nb),
         epoch=jnp.int32(0))
 
@@ -164,7 +169,10 @@ def run_streaming_hybrid(
         f = als_cfg.f
         x0 = np.zeros((grid.g * grid.mb, f), np.float32)
         t0 = np.zeros((grid.g * grid.nb, f), np.float32)
-        x0[:grid.m] = fac.x[:grid.m]
+        if grid.user_perm is not None:    # grid rows live in permuted order
+            x0[:grid.m] = fac.x[:grid.m][grid.user_perm]
+        else:
+            x0[:grid.m] = fac.x[:grid.m]
         t0[:grid.n] = fac.theta[:grid.n]
         warm = FactorStore.from_arrays(x0, t0)
     final, sgd_hist, sgd_tel = run_streaming_sgd(

@@ -140,6 +140,41 @@ def _scan_epoch(xb, tb, idx, val, cnt, set_order, lr, *, g, lam,
     return xb, tb
 
 
+def _set_k_groups(grid: BlockGrid, s: int):
+    """Diagonal set ``s``'s tiles grouped by per-tile K: [(K_t, ii, jj)].
+
+    Tiles within a set are disjoint in both factors, so splitting the set
+    into same-K groups and sweeping the groups sequentially is exactly the
+    one-stack sweep — each group still batches through one
+    ``sgd_tiles_update`` dispatch at its own (tighter) K.
+    """
+    by_k: dict[int, list[tuple[int, int]]] = {}
+    for i in range(grid.g):
+        j = (i + s) % grid.g
+        by_k.setdefault(grid.tile_k(i, j), []).append((i, j))
+    return [(k, np.array([ij[0] for ij in ts], dtype=np.int64),
+             np.array([ij[1] for ij in ts], dtype=np.int64))
+            for k, ts in sorted(by_k.items())]
+
+
+def _grouped_epoch(xb, tb, idx, val, cnt, set_order, lr, grid: BlockGrid,
+                   cfg: SgdConfig):
+    """Per-tile-K epoch: host loop over sets, one stacked dispatch per
+    same-K group, each sliced to that group's K (trailing slot columns of
+    a tile are all-padding, so the slice drops only masked no-op slots —
+    grouped and uniform epochs are numerically identical)."""
+    for s in np.asarray(set_order).tolist():
+        for k_t, ii, jj in _set_k_groups(grid, int(s)):
+            x_new, t_new = sgd_tiles_update(
+                xb[ii], tb[jj], idx[ii, jj, :, :k_t], val[ii, jj, :, :k_t],
+                cnt[ii, jj], jnp.float32(lr), cfg.lam, mode=cfg.mode,
+                row_mult=cfg.row_mult, col_mult=cfg.col_mult,
+                f_mult=cfg.f_mult)
+            xb = xb.at[ii].set(x_new)
+            tb = tb.at[jj].set(t_new)
+    return xb, tb
+
+
 def sgd_epoch(state: SgdState, gt, grid: BlockGrid, cfg: SgdConfig,
               lr: float, *, set_order=None) -> SgdState:
     """One full epoch: g diagonal sets x g independent tiles per set.
@@ -150,6 +185,10 @@ def sgd_epoch(state: SgdState, gt, grid: BlockGrid, cfg: SgdConfig,
     block), so shapes are asserted at entry instead.  ``set_order`` is the
     epoch's set permutation (``epoch_set_order``); None keeps the canonical
     0..g-1 order.
+
+    A grid with a non-uniform ``tile_K`` routes through the grouped
+    per-tile-K epoch (same math, tighter slot slices); uniform grids keep
+    the single jitted ``lax.scan``.
     """
     idx, val, cnt = gt
     g, mb, nb, f = grid.g, grid.mb, grid.nb, cfg.f
@@ -159,11 +198,18 @@ def sgd_epoch(state: SgdState, gt, grid: BlockGrid, cfg: SgdConfig,
     if set_order is None:
         set_order = jnp.arange(g)
     lr_t = jnp.float32(lr)     # traced, so the lr decay never retriggers jit
-    xb, tb = _scan_epoch(
-        state.x.reshape(g, mb, f), state.theta.reshape(g, nb, f),
-        idx, val, cnt, jnp.asarray(set_order), lr_t, g=g,
-        lam=cfg.lam, mode=cfg.mode, row_mult=cfg.row_mult,
-        col_mult=cfg.col_mult, f_mult=cfg.f_mult)
+    binned = (grid.tile_K is not None
+              and int(grid.tile_K.min()) < grid.K)
+    if binned:
+        xb, tb = _grouped_epoch(
+            state.x.reshape(g, mb, f), state.theta.reshape(g, nb, f),
+            idx, val, cnt, set_order, lr, grid, cfg)
+    else:
+        xb, tb = _scan_epoch(
+            state.x.reshape(g, mb, f), state.theta.reshape(g, nb, f),
+            idx, val, cnt, jnp.asarray(set_order), lr_t, g=g,
+            lam=cfg.lam, mode=cfg.mode, row_mult=cfg.row_mult,
+            col_mult=cfg.col_mult, f_mult=cfg.f_mult)
     return SgdState(x=xb.reshape(g * mb, f), theta=tb.reshape(g * nb, f),
                     epoch=state.epoch + 1)
 
@@ -207,7 +253,6 @@ def sgd_train(
                              epoch=jnp.int32(ck_epoch))
             start = ck_epoch
     gt = grid_triplet(grid)
-    m, n = grid.m, grid.n
     history: list[dict] = []
     for ep in range(start, cfg.epochs):
         lr = epoch_lr(cfg, ep)
@@ -218,7 +263,7 @@ def sgd_train(
                                                         grid.g))
             jax.block_until_ready(state.x)
         rec = {"epoch": ep + 1, "lr": lr}
-        x, th = state.x[:m], state.theta[:n]
+        x, th = eval_factors(state, grid)
         if test is not None:
             rec["test_rmse"] = float(rmse_padded(x, th, *test))
         if train_eval is not None:
@@ -249,6 +294,18 @@ def pad_factor(a: jax.Array, rows_to: int) -> jax.Array:
     return jnp.pad(a, ((0, extra), (0, 0)))
 
 
+def eval_factors(state: SgdState, grid: BlockGrid):
+    """(X [m, f], Theta [n, f]) in ORIGINAL global coordinates: undoes the
+    grid's degree-sort user permutation (identity on unsorted grids) and
+    slices off the block-padding rows — the only correct view for any
+    global-coordinate evaluation or hand-off."""
+    if grid.user_perm is None:
+        return state.x[:grid.m], state.theta[:grid.n]
+    return (jnp.take(state.x, jnp.asarray(grid.user_inv), axis=0),
+            state.theta[:grid.n])
+
+
 def factors_np(state: SgdState, grid: BlockGrid) -> tuple[np.ndarray, np.ndarray]:
-    """Unpadded (X [m, f], Theta [n, f]) as numpy."""
-    return (np.asarray(state.x[:grid.m]), np.asarray(state.theta[:grid.n]))
+    """Unpadded (X [m, f], Theta [n, f]) as numpy, original row order."""
+    x, th = eval_factors(state, grid)
+    return (np.asarray(x), np.asarray(th))

@@ -9,10 +9,14 @@ arrays::
                         weighted-lambda regularizer)
 
 Padding slots carry ``idx = 0`` and ``val = 0`` and are additionally masked
-by position >= cnt, so gathered garbage never contributes.  K is chosen per
-row *bucket* (rows sorted by degree, cuMF's binning made static) so the
-padding overhead on power-law data stays bounded; the single-K variant is
-what the jitted kernels consume.
+by position >= cnt, so gathered garbage never contributes.  A single
+``PaddedELL`` pads every row to one K; :class:`BinnedELL` groups rows into
+~log-spaced degree bins (cuMF's degree binning, Tan 1603.03820 §4.1 /
+1808.03843's memory-optimized layout) so each bin pads to its own, much
+tighter K — the kernels then run once per bin, one compiled shape per bin.
+Because padding slots are exact zeros, re-padding a row at any K >= its
+degree changes no f32 sum: binned and unbinned layouts are numerically
+identical, not merely close.
 
 Everything here is host-side preprocessing (numpy) + a few jnp helpers; the
 hot path lives in repro/kernels.
@@ -48,9 +52,20 @@ class PaddedELL:
 
     @property
     def fill(self) -> float:
-        """Padding overhead: stored slots / true nonzeros (>= 1)."""
+        """Padding overhead of THIS component: stored slots / true nonzeros
+        (>= 1).  A store that holds several padded components (R, R^T, model
+        shards) has one fill per component — aggregate with an explicit
+        policy (`RatingStore.worst_fill` maxes for capacity bounds,
+        ``fill_breakdown()`` exposes each for attribution), never by reusing
+        a single component's scalar."""
         nnz = self.nnz
-        return float(self.m * self.K) / max(nnz, 1)
+        return float(self.padded_slots) / max(nnz, 1)
+
+    @property
+    def padded_slots(self) -> int:
+        """Stored slots (real + padding): the numerator of ``fill``."""
+        return int(self.idx.shape[0]) * int(self.K) if self.idx.ndim == 2 \
+            else int(np.prod(self.idx.shape[:-1])) * int(self.K)
 
     def mask(self) -> np.ndarray:
         """[m, K] float32 1.0 where a slot holds a real nonzero."""
@@ -80,10 +95,16 @@ def csr_from_coo(rows: np.ndarray, cols: np.ndarray, vals: np.ndarray,
 
 def pad_csr(ptr: np.ndarray, cols: np.ndarray, vals: np.ndarray,
             n_cols: int, k_multiple: int = 8, k_cap: int | None = None) -> PaddedELL:
-    """CSR -> PaddedELL.  K = max row degree rounded up to ``k_multiple``.
+    """CSR -> PaddedELL, reference implementation (python row loop).
 
-    ``k_cap`` optionally truncates pathological rows (keeps the first k_cap
-    ratings); the dropped tail is reported by the caller via fill/cnt deltas.
+    K = max row degree rounded up to ``k_multiple``.  ``k_cap`` optionally
+    truncates pathological rows (keeps the first k_cap ratings); the dropped
+    tail is reported by the caller via fill/cnt deltas.
+
+    This is the ORACLE: every production path routes through
+    :func:`pad_csr_fast`, and the property test in tests/test_sparse.py
+    pins the two to identical ``(idx, val, cnt)`` on ragged inputs.  Keep
+    this loop dumb and obviously correct; optimize the fast variant.
     """
     m = ptr.shape[0] - 1
     cnt = (ptr[1:] - ptr[:-1]).astype(np.int32)
@@ -102,15 +123,26 @@ def pad_csr(ptr: np.ndarray, cols: np.ndarray, vals: np.ndarray,
 
 
 def pad_csr_fast(ptr: np.ndarray, cols: np.ndarray, vals: np.ndarray,
-                 n_cols: int, k_multiple: int = 8) -> PaddedELL:
-    """Vectorized pad_csr (no python loop) for large matrices."""
+                 n_cols: int, k_multiple: int = 8,
+                 k_cap: int | None = None) -> PaddedELL:
+    """Vectorized pad_csr (no python loop) for large matrices.
+
+    Bit-identical to :func:`pad_csr` on every input (including ``k_cap``
+    truncation, which keeps each row's first ``k_cap`` ratings) — the
+    property test in tests/test_sparse.py enforces this.
+    """
     m = ptr.shape[0] - 1
-    cnt = (ptr[1:] - ptr[:-1]).astype(np.int32)
+    full = (ptr[1:] - ptr[:-1]).astype(np.int32)
+    cnt = np.minimum(full, np.int32(k_cap)) if k_cap is not None else full
     kmax = int(cnt.max()) if m else 0
     K = max(k_multiple, -(-kmax // k_multiple) * k_multiple)
     # position of each nonzero within its row
-    pos = np.arange(len(cols), dtype=np.int64) - np.repeat(ptr[:-1], cnt)
-    rows = np.repeat(np.arange(m, dtype=np.int64), cnt)
+    pos = np.arange(len(cols), dtype=np.int64) - np.repeat(ptr[:-1], full)
+    rows = np.repeat(np.arange(m, dtype=np.int64), full)
+    if k_cap is not None:
+        keep = pos < cnt[rows]         # drop each row's truncated tail
+        pos, rows = pos[keep], rows[keep]
+        cols, vals = cols[keep], vals[keep]
     idx = np.zeros((m, K), dtype=np.int32)
     val = np.zeros((m, K), dtype=np.float32)
     idx[rows, pos] = cols
@@ -188,6 +220,194 @@ def partition_padded(ell: PaddedELL, p: int, k_multiple: int = 8) -> PaddedELL:
         val_p[i, uu, pos[uu, kk]] = ell.val[uu, kk]
     out = PaddedELL(idx=idx_p, val=val_p, cnt=cnt_p, n_cols=npp)
     return out
+
+
+# ---------------------------------------------------------------------------
+# Degree-binned layout (cuMF §4.1 / Tan 1808.03843 memory-optimized batching)
+# ---------------------------------------------------------------------------
+
+def round_k(k: int, k_multiple: int = 8) -> int:
+    """Round a degree up to the kernel lane multiple (min one lane)."""
+    return max(k_multiple, -(-int(k) // k_multiple) * k_multiple)
+
+
+def bin_caps(kmax: int, n_bins: int, k_multiple: int = 8) -> list[int]:
+    """Ascending ~log-spaced per-bin degree caps ending at ``kmax`` rounded.
+
+    Log spacing is the right ladder for power-law degrees: each bin's K is a
+    roughly constant factor above the previous one's, so per-row overshoot
+    (K_bin / degree) is bounded by that factor regardless of the skew.
+    Duplicate rungs collapse, so the result may hold fewer than ``n_bins``
+    caps on low-degree data.
+    """
+    top = round_k(kmax, k_multiple)
+    if n_bins <= 1 or top <= k_multiple:
+        return [top]
+    grid = np.exp(np.linspace(np.log(k_multiple), np.log(top), n_bins))
+    # clamp each rung to top: exp(log(top)) can land epsilon above top and
+    # ceil would then mint a phantom rung one lane past the real maximum
+    return sorted({min(round_k(int(np.ceil(g)), k_multiple), top)
+                   for g in grid})
+
+
+@dataclasses.dataclass
+class BinnedELL:
+    """Rows of one logical sparse matrix, grouped into degree bins.
+
+    ``bins[b]`` is a :class:`PaddedELL` holding the rows assigned to bin b
+    (those whose degree rounds into ``(caps[b-1], caps[b]]``), padded to that
+    bin's own tight K.  ``rows[b]`` maps bin-local row u back to the original
+    row index; rows keep their original relative order inside each bin
+    (stable grouping), so each ``rows[b]`` is strictly ascending and any
+    original-row range ``[start, stop)`` cuts every bin in one contiguous
+    span (see :meth:`bin_spans`) — the property the wave scheduler relies on.
+
+    ``perm``/``inv_perm`` are the full row permutation induced by the
+    grouping: ``perm = concat(rows)``, ``inv_perm[perm] == arange(m)``.
+    Factors are always kept in ORIGINAL row order; the permutation never
+    leaves this module's consumers — solvers scatter per-bin results back
+    through ``rows[b]``.
+    """
+
+    bins: Tuple[PaddedELL, ...]
+    rows: Tuple[np.ndarray, ...]   # per-bin original row indices, ascending
+    n_cols: int
+    m: int                         # original (unbinned) row count
+
+    @property
+    def n_bins(self) -> int:
+        return len(self.bins)
+
+    @property
+    def K_list(self) -> Tuple[int, ...]:
+        return tuple(b.K for b in self.bins)
+
+    @property
+    def nnz(self) -> int:
+        return sum(b.nnz for b in self.bins)
+
+    @property
+    def padded_slots(self) -> int:
+        return sum(b.padded_slots for b in self.bins)
+
+    @property
+    def fill(self) -> float:
+        """Stored slots / true nonzeros, summed OVER bins — the aggregate
+        the planner prices (each bin also exposes its own ``.fill``)."""
+        return float(self.padded_slots) / max(self.nnz, 1)
+
+    @property
+    def perm(self) -> np.ndarray:
+        return np.concatenate([r for r in self.rows]) if self.rows \
+            else np.zeros(0, dtype=np.int64)
+
+    @property
+    def inv_perm(self) -> np.ndarray:
+        inv = np.empty(self.m, dtype=np.int64)
+        inv[self.perm] = np.arange(self.m, dtype=np.int64)
+        return inv
+
+    def bin_spans(self, start: int, stop: int) -> list[Tuple[int, int]]:
+        """Per-bin contiguous (lo, hi) bin-local spans covering original
+        rows ``[start, stop)`` — exact because each ``rows[b]`` ascends."""
+        return [(int(np.searchsorted(r, start)), int(np.searchsorted(r, stop)))
+                for r in self.rows]
+
+    def row_slice(self, start: int, stop: int) -> "BinnedELL":
+        """Bin-wise cut of original rows ``[start, stop)``; row indices are
+        rebased to the slice so the result is a self-contained BinnedELL
+        over ``stop - start`` rows (empty bins are kept: slice shapes stay
+        congruent with the parent's bin structure)."""
+        spans = self.bin_spans(start, stop)
+        return BinnedELL(
+            bins=tuple(row_slice(b, lo, hi)
+                       for b, (lo, hi) in zip(self.bins, spans)),
+            rows=tuple((r[lo:hi] - start).astype(np.int64)
+                       for r, (lo, hi) in zip(self.rows, spans)),
+            n_cols=self.n_cols, m=stop - start)
+
+    def to_padded(self) -> PaddedELL:
+        """Reassemble one uniform-K PaddedELL in original row order (the
+        parity oracle; K = max over bins, re-padding adds only zero slots)."""
+        K = max(self.K_list) if self.bins else 8
+        idx = np.zeros((self.m, K), dtype=np.int32)
+        val = np.zeros((self.m, K), dtype=np.float32)
+        cnt = np.zeros(self.m, dtype=np.int32)
+        for b, r in zip(self.bins, self.rows):
+            idx[r, :b.K] = b.idx
+            val[r, :b.K] = b.val
+            cnt[r] = b.cnt
+        return PaddedELL(idx=idx, val=val, cnt=cnt, n_cols=self.n_cols)
+
+
+def bin_rows(ptr: np.ndarray, cols: np.ndarray, vals: np.ndarray,
+             n_cols: int, n_bins: int = 1, k_multiple: int = 8) -> BinnedELL:
+    """CSR -> :class:`BinnedELL`: stable-group rows into ~log-spaced degree
+    bins, each padded by :func:`pad_csr_fast` at its own tight K.
+
+    ``n_bins=1`` reproduces today's layout bit-for-bit: one bin whose
+    PaddedELL equals ``pad_csr_fast(ptr, cols, vals, n_cols)`` exactly and
+    ``perm == arange(m)``.  Empty bins are dropped (every kernel dispatch
+    maps to a non-empty bin); at least one bin always remains.
+    """
+    m = ptr.shape[0] - 1
+    cnt = (ptr[1:] - ptr[:-1]).astype(np.int64)
+    kmax = int(cnt.max()) if m else 0
+    caps = bin_caps(kmax, n_bins, k_multiple)
+    # row -> first cap covering its rounded degree (cnt=0 rows -> bin 0)
+    assign = np.searchsorted(np.asarray(caps, dtype=np.int64),
+                             np.maximum(cnt, 1), side="left")
+    bins: list[PaddedELL] = []
+    rows: list[np.ndarray] = []
+    for b in range(len(caps)):
+        rb = np.nonzero(assign == b)[0].astype(np.int64)
+        if rb.size == 0:
+            continue
+        cnt_b = cnt[rb]
+        # gather this bin's CSR entries (rows keep original relative order)
+        off = np.cumsum(cnt_b) - cnt_b
+        take = np.repeat(ptr[:-1][rb] - off, cnt_b) \
+            + np.arange(int(cnt_b.sum()), dtype=np.int64)
+        ptr_b = np.zeros(rb.size + 1, dtype=np.int64)
+        np.cumsum(cnt_b, out=ptr_b[1:])
+        bins.append(pad_csr_fast(ptr_b, cols[take], vals[take], n_cols,
+                                 k_multiple=k_multiple))
+        rows.append(rb)
+    if not bins:       # m == 0: keep one (empty) bin so consumers never
+        bins.append(pad_csr_fast(ptr, cols, vals, n_cols,   # see zero bins
+                                 k_multiple=k_multiple))
+        rows.append(np.zeros(0, dtype=np.int64))
+    return BinnedELL(bins=tuple(bins), rows=tuple(rows),
+                     n_cols=n_cols, m=m)
+
+
+def bin_padded(ell: PaddedELL, n_bins: int,
+               k_multiple: int = 8) -> BinnedELL:
+    """Re-bin an existing PaddedELL (e.g. after :func:`pad_rows`) without a
+    round trip through COO: rows are grouped by ``cnt`` and each bin is
+    re-padded at its own tight K by dropping all-padding columns."""
+    cnt = ell.cnt.astype(np.int64)
+    kmax = int(cnt.max()) if ell.m else 0
+    caps = bin_caps(kmax, n_bins, k_multiple)
+    assign = np.searchsorted(np.asarray(caps, dtype=np.int64),
+                             np.maximum(cnt, 1), side="left")
+    bins: list[PaddedELL] = []
+    rows: list[np.ndarray] = []
+    for b in range(len(caps)):
+        rb = np.nonzero(assign == b)[0].astype(np.int64)
+        if rb.size == 0:
+            continue
+        kb = min(round_k(int(cnt[rb].max()), k_multiple), ell.K)
+        bins.append(PaddedELL(idx=ell.idx[rb, :kb].copy(),
+                              val=ell.val[rb, :kb].copy(),
+                              cnt=ell.cnt[rb].copy(), n_cols=ell.n_cols))
+        rows.append(rb)
+    if not bins:       # m == 0
+        bins.append(PaddedELL(idx=ell.idx.copy(), val=ell.val.copy(),
+                              cnt=ell.cnt.copy(), n_cols=ell.n_cols))
+        rows.append(np.zeros(0, dtype=np.int64))
+    return BinnedELL(bins=tuple(bins), rows=tuple(rows),
+                     n_cols=ell.n_cols, m=ell.m)
 
 
 def row_partition(ell: PaddedELL, q: int) -> PaddedELL:

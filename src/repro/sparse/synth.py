@@ -16,7 +16,8 @@ from typing import Dict, Tuple
 
 import numpy as np
 
-from repro.sparse.padded import PaddedELL, csr_from_coo, pad_csr_fast
+from repro.sparse.padded import (BinnedELL, PaddedELL, bin_rows,
+                                 csr_from_coo, pad_csr_fast)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -82,19 +83,27 @@ def make_synthetic_ratings(
     alpha: float = 0.8,
     test_frac: float = 0.1,
     k_multiple: int = 8,
+    alpha_user: float = 0.0,
 ) -> Tuple[PaddedELL, PaddedELL, np.ndarray, np.ndarray]:
     """Return (R_train as PaddedELL rows=users, R_train^T as PaddedELL rows=items,
     X*, Theta*) for a planted low-rank model.
 
-    Ratings are r_uv = <x*_u, theta*_v>/sqrt(f) + noise; users uniform, items
-    power-law(alpha) — the skew that motivates cuMF's degree-binning.
+    Ratings are r_uv = <x*_u, theta*_v>/sqrt(f) + noise; items power-law
+    (``alpha``) — the skew that motivates cuMF's degree-binning.  Users are
+    uniform by default; ``alpha_user > 0`` draws them power-law too (real
+    rating matrices skew on both axes).  ``alpha_user=0.0`` keeps the exact
+    historical RNG call sequence, so existing seeds reproduce bit-for-bit.
     """
     rng = np.random.default_rng(seed)
     f = spec.f
     x_star = rng.standard_normal((spec.m, f)).astype(np.float32)
     t_star = rng.standard_normal((spec.n, f)).astype(np.float32)
 
-    rows = rng.integers(0, spec.m, size=spec.nnz, dtype=np.int64)
+    if alpha_user > 0.0:
+        user_p = _power_law_probs(spec.m, alpha_user, rng)
+        rows = rng.choice(spec.m, size=spec.nnz, p=user_p).astype(np.int64)
+    else:
+        rows = rng.integers(0, spec.m, size=spec.nnz, dtype=np.int64)
     item_p = _power_law_probs(spec.n, alpha, rng)
     cols = rng.choice(spec.n, size=spec.nnz, p=item_p).astype(np.int64)
     # de-duplicate (u, v) pairs
@@ -117,6 +126,60 @@ def make_synthetic_ratings(
     r_tr = _build(rows[train_sel], cols[train_sel], vals[train_sel], spec.m, spec.n)
     r_tr_T = _build(cols[train_sel], rows[train_sel], vals[train_sel], spec.n, spec.m)
     r_te = _build(rows[test_sel], cols[test_sel], vals[test_sel], spec.m, spec.n)
+    return r_tr, r_tr_T, r_te, (x_star, t_star)
+
+
+def make_synthetic_ratings_binned(
+    spec: SynthSpec,
+    n_bins: int,
+    seed: int = 0,
+    noise: float = 0.1,
+    alpha: float = 0.8,
+    test_frac: float = 0.1,
+    k_multiple: int = 8,
+    alpha_user: float = 0.0,
+) -> Tuple[BinnedELL, BinnedELL, PaddedELL, Tuple[np.ndarray, np.ndarray]]:
+    """Degree-binned construction path: the same planted problem as
+    :func:`make_synthetic_ratings` (identical RNG sequence, identical COO),
+    but R and R^T come back as :class:`BinnedELL` built straight from CSR
+    via :func:`bin_rows` — no uniform-K intermediate is ever materialized.
+    The test split stays a PaddedELL (evaluation gathers, never solves).
+    """
+    rng = np.random.default_rng(seed)
+    f = spec.f
+    x_star = rng.standard_normal((spec.m, f)).astype(np.float32)
+    t_star = rng.standard_normal((spec.n, f)).astype(np.float32)
+
+    if alpha_user > 0.0:
+        user_p = _power_law_probs(spec.m, alpha_user, rng)
+        rows = rng.choice(spec.m, size=spec.nnz, p=user_p).astype(np.int64)
+    else:
+        rows = rng.integers(0, spec.m, size=spec.nnz, dtype=np.int64)
+    item_p = _power_law_probs(spec.n, alpha, rng)
+    cols = rng.choice(spec.n, size=spec.nnz, p=item_p).astype(np.int64)
+    key = rows * spec.n + cols
+    _, uniq = np.unique(key, return_index=True)
+    rows, cols = rows[uniq], cols[uniq]
+    vals = (
+        np.einsum("kf,kf->k", x_star[rows], t_star[cols]) / np.sqrt(f)
+        + noise * rng.standard_normal(len(rows))
+    ).astype(np.float32)
+
+    n_test = int(len(rows) * test_frac)
+    perm = rng.permutation(len(rows))
+    test_sel, train_sel = perm[:n_test], perm[n_test:]
+
+    def _build_binned(r, c, v, m, n):
+        ptr, cc, vv = csr_from_coo(r, c, v, m)
+        return bin_rows(ptr, cc, vv, n, n_bins=n_bins, k_multiple=k_multiple)
+
+    r_tr = _build_binned(rows[train_sel], cols[train_sel], vals[train_sel],
+                         spec.m, spec.n)
+    r_tr_T = _build_binned(cols[train_sel], rows[train_sel], vals[train_sel],
+                           spec.n, spec.m)
+    ptr, cc, vv = csr_from_coo(rows[test_sel], cols[test_sel], vals[test_sel],
+                               spec.m)
+    r_te = pad_csr_fast(ptr, cc, vv, spec.n, k_multiple=k_multiple)
     return r_tr, r_tr_T, r_te, (x_star, t_star)
 
 

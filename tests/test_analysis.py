@@ -16,6 +16,7 @@ import pytest
 from repro.analysis.engine import (AnalysisConfig, Baseline, Finding,
                                    run_analysis)
 from repro.analysis.rules import ALL_RULES, get_rules, rule_names
+from repro.analysis.rules.bin_shape import BinShapeRule
 from repro.analysis.rules.checkpoint_aliasing import CheckpointAliasingRule
 from repro.analysis.rules.compat_routing import CompatRoutingRule
 from repro.analysis.rules.obs_routing import ObsRoutingRule
@@ -153,6 +154,57 @@ class TestObsRouting:
             def probe():
                 return time.time()  # reprolint: disable=obs-routing
         """, rel="src/repro/launch/dryrun.py")
+        assert found == []
+
+
+# ---------------------------------------------------------------------------
+# bin-shape
+# ---------------------------------------------------------------------------
+
+class TestBinShape:
+    def test_flags_grid_wide_k_in_bin_loop(self, tmp_path):
+        found = run_rule(tmp_path, BinShapeRule(), """
+            def solve_all(fixed, binned, ell, kern):
+                for b, rows in zip(binned.bins, binned.rows):
+                    kern(fixed, ell.idx[:, :ell.K], b.cnt)
+        """)
+        assert len(found) == 1 and found[0].rule == "bin-shape"
+        assert "ell.K" in found[0].message
+
+    def test_flags_in_comprehension_and_k_groups_loop(self, tmp_path):
+        found = run_rule(tmp_path, BinShapeRule(), """
+            def sizes(binned, ell):
+                return [b.m * ell.K for b in binned.bins]
+
+            def sweep(grid, idx, kern):
+                for k_t, ii, jj in _set_k_groups(grid, 0):
+                    kern(idx[ii, jj, :, :grid.K])
+        """)
+        assert len(found) == 2
+        assert {"ell.K" in f.message or "grid.K" in f.message
+                for f in found} == {True}
+
+    def test_per_bin_k_is_clean(self, tmp_path):
+        found = run_rule(tmp_path, BinShapeRule(), """
+            def solve_all(fixed, binned, kern):
+                out = []
+                for b, rows in zip(binned.bins, binned.rows):
+                    kb = b.K
+                    out.append(kern(fixed, b.idx[:, :kb], b.cnt))
+                return out, sum((hi - lo) * b.K for b, (lo, hi)
+                                in zip(binned.bins, binned.spans))
+
+            def uniform(ell, kern):
+                return kern(ell.idx[:, :ell.K])   # no bin in scope: fine
+        """)
+        assert found == []
+
+    def test_suppression_comment_works(self, tmp_path):
+        found = run_rule(tmp_path, BinShapeRule(), """
+            def audit(binned, ell):
+                for b in binned.bins:
+                    assert b.K <= ell.K  # reprolint: disable=bin-shape
+        """)
         assert found == []
 
 
@@ -522,11 +574,11 @@ class TestEngine:
 
 class TestCLI:
     def test_rule_catalog_is_complete(self):
-        assert sorted(rule_names()) == ["checkpoint-aliasing",
+        assert sorted(rule_names()) == ["bin-shape", "checkpoint-aliasing",
                                         "compat-routing", "obs-routing",
                                         "pallas-budget", "precision-drift",
                                         "shard-safety"]
-        assert len(ALL_RULES) == 6
+        assert len(ALL_RULES) == 7
 
     def test_get_rules_unknown_name_fails_loudly(self):
         with pytest.raises(ValueError, match="unknown rule name"):

@@ -384,3 +384,183 @@ def test_kill_and_resume_reaches_same_result(tmp_path, kill_after):
     assert abs(hist[-1]["train_rmse"] - ref_hist[-1]["train_rmse"]) < 1e-4
     np.testing.assert_allclose(fac.x, ref_fac.x, atol=1e-5)
     np.testing.assert_allclose(fac.theta, ref_fac.theta, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Degree-binned stores and streaming (ISSUE 9)
+# ---------------------------------------------------------------------------
+
+def test_rating_store_binned_invariants():
+    """Binned shards hold the same nonzeros, expose per-component fills,
+    and price the planner through per-bin (slots, nnz) pairs whose
+    aggregate equals the worst-orientation fill."""
+    r, _, _, _ = _problem()
+    store_u = RatingStore(r, q=4)
+    store_b = RatingStore(r, q=4, n_bins=4)
+    assert store_b.n_bins == 4 and store_u.n_bins == 1
+    assert store_b.r_binned.nnz == r.nnz
+    assert sum(b.nnz for b in store_b.rt_binned) == r.nnz
+    # binned fills never exceed the uniform ones
+    assert store_b.fill_r <= store_u.fill_r
+    assert store_b.fill_rt <= store_u.fill_rt
+    assert store_b.worst_fill <= store_u.worst_fill
+    fb = store_b.fill_breakdown()
+    assert set(fb) == {"r", "rt"}
+    assert fb["r"] == store_b.fill_r and fb["rt"] == store_b.fill_rt
+    pairs = store_b.bin_fill_pairs()
+    slots = sum(s for s, _ in pairs)
+    nnz = sum(z for _, z in pairs)
+    assert abs(slots / nnz - store_b.worst_fill) < 1e-12
+    # the planner prices exactly that aggregate
+    pa = plan_for(SPEC.m, SPEC.n, r.nnz, SPEC.f, p=1, q=4,
+                  fill=store_b.worst_fill)
+    pb = plan_for(SPEC.m, SPEC.n, r.nnz, SPEC.f, p=1, q=4, bin_fills=pairs)
+    assert pa.terms["R_shard"] == pb.terms["R_shard"]
+    # row slices cover the binned matrix exactly
+    npp = store_b.m_pad // 4
+    assert sum(store_b.x_slice_binned(j * npp, (j + 1) * npp).nnz
+               for j in range(4)) == r.nnz
+    # uniform stores don't grow binned shards or accept binned queries
+    assert store_u.r_binned is None
+    with pytest.raises(AssertionError):
+        store_u.x_slice_binned(0, npp)
+
+
+def test_binned_store_rejects_model_shards():
+    """Binned + p > 1 mesh sharding is an explicit ROADMAP follow-up, not a
+    silent wrong answer."""
+    r, _, _, _ = _problem()
+    with pytest.raises(AssertionError, match="ROADMAP"):
+        RatingStore(r, q=4, p=2, n_bins=4)
+
+
+@pytest.mark.slow
+def test_binned_streaming_matches_unbinned():
+    """Acceptance: a binned waves >= 2 streaming run reproduces the
+    unbinned factors to 1e-5 (padding slots are exact zeros, so binning is
+    a layout change only), its ledger stays green, and the measured
+    fill_waste_ratio drops vs the uniform layout."""
+    r, _, _, _ = _problem()
+    cfg = als_mod.AlsConfig(f=SPEC.f, lam=SPEC.lam, iters=3, mode="ref")
+    rr = als_mod.ell_triplet(r)
+
+    store_u = RatingStore(r, q=4)
+    plan_u = _forced_plan(r, q=4, n_data=2, store=store_u)
+    sched_u = build_schedule(plan_u, SPEC.m, SPEC.n, n_data=2)
+    fac_u, hist_u, tel_u = run_streaming_als(store_u, sched_u, cfg,
+                                             train_eval=rr)
+
+    store_b = RatingStore(r, q=4, n_bins=4)
+    acc_eps = SPEC.n * (SPEC.f * SPEC.f + 3 * SPEC.f + 1) * 4
+    plan_b = plan_for(SPEC.m, SPEC.n, r.nnz, SPEC.f, p=1, q=4, n_data=2,
+                      bin_fills=store_b.bin_fill_pairs(), eps=acc_eps,
+                      buffers=4, hbm_bytes=1 << 22)
+    sched_b = build_schedule(plan_b, SPEC.m, SPEC.n, n_data=2)
+    assert len(sched_b.waves) >= 2
+    fac_b, hist_b, tel_b = run_streaming_als(store_b, sched_b, cfg,
+                                             train_eval=rr)
+
+    np.testing.assert_allclose(fac_b.x, fac_u.x, atol=1e-5)
+    np.testing.assert_allclose(fac_b.theta, fac_u.theta, atol=1e-5)
+    for a, b in zip(hist_b, hist_u):
+        assert abs(a["train_rmse"] - b["train_rmse"]) < 1e-5
+    assert tel_b.peak_bytes <= tel_b.capacity_bytes
+
+    def _rec(tel, name):
+        return next(rec for rec in tel.ledger["records"]
+                    if rec["name"] == name)
+
+    for tel in (tel_u, tel_b):
+        assert all(rec["ok"] for rec in tel.ledger["records"]), \
+            [rec for rec in tel.ledger["records"] if not rec["ok"]]
+    assert tel_u.ledger["run"]["n_bins"] == 1
+    assert tel_b.ledger["run"]["n_bins"] == 4
+    # the measured fill actually dropped, and the per-half fills exist
+    fwu = _rec(tel_u, "fill_waste_ratio")["measured"]
+    fwb = _rec(tel_b, "fill_waste_ratio")["measured"]
+    assert fwb < fwu
+    for name in ("fill/solve_x", "fill/accumulate_theta",
+                 "fill_bound/r", "fill_bound/rt"):
+        assert _rec(tel_b, name)["ok"]
+
+
+@pytest.mark.slow
+def test_binned_kill_and_resume_bit_exact(tmp_path):
+    """A binned streaming run killed mid-iteration resumes to the same
+    factors as the uninterrupted binned run — checkpoint state is
+    layout-agnostic (factors in original row order)."""
+    r, _, _, _ = _problem()
+    cfg = als_mod.AlsConfig(f=SPEC.f, lam=SPEC.lam, iters=2, mode="ref")
+    store = RatingStore(r, q=4, n_bins=4)
+    acc_eps = SPEC.n * (SPEC.f * SPEC.f + 3 * SPEC.f + 1) * 4
+    plan = plan_for(SPEC.m, SPEC.n, r.nnz, SPEC.f, p=1, q=4, n_data=2,
+                    bin_fills=store.bin_fill_pairs(), eps=acc_eps,
+                    buffers=4, hbm_bytes=1 << 22)
+    sched = build_schedule(plan, SPEC.m, SPEC.n, n_data=2)
+    ref_fac, _, _ = run_streaming_als(store, sched, cfg)
+
+    ckpt = str(tmp_path / "binned_ckpt")
+    shutil.rmtree(ckpt, ignore_errors=True)
+    with pytest.raises(SimulatedFailure):
+        run_streaming_als(store, sched, cfg, ckpt_dir=ckpt,
+                          fail_after_waves=3)
+    fac, _, tel = run_streaming_als(store, sched, cfg, ckpt_dir=ckpt)
+    assert tel.resumed_from_step == 3
+    np.testing.assert_array_equal(fac.x, ref_fac.x)
+    np.testing.assert_array_equal(fac.theta, ref_fac.theta)
+
+
+@pytest.mark.slow
+def test_streaming_sgd_per_tile_k_matches_uniform():
+    """Per-tile-K tiles stream through the grouped same-K dispatch and must
+    land on bit-identical factors (slot-column slicing drops only masked
+    padding) while storing strictly fewer padded slots."""
+    r, rte, grid_u, tiles_u, sched_u = _sgd_problem(g=4, n_workers=2)
+    grid_b = block_ell(r, g=4, per_tile_k=True)
+    tiles_b = TileStore(grid_b)
+    sched_b = build_sgd_schedule(grid_b, SPEC.f, n_workers=2)
+    assert grid_b.padded_slots <= grid_u.padded_slots
+    cfg = _sgd_cfg(epochs=2)
+    fac_u, hist_u, _ = run_streaming_sgd(tiles_u, sched_u, cfg)
+    fac_b, hist_b, tel_b = run_streaming_sgd(tiles_b, sched_b, cfg)
+    np.testing.assert_array_equal(fac_b.x, fac_u.x)
+    np.testing.assert_array_equal(fac_b.theta, fac_u.theta)
+    assert tel_b.peak_bytes <= tel_b.capacity_bytes
+
+
+@pytest.mark.slow
+def test_streaming_hybrid_binned_matches_uniform(tmp_path):
+    """Hybrid parity: binned ALS warm start + per-tile-K SGD refine lands
+    within 1e-5 of the all-uniform hybrid (ALS layout change is exact to
+    float roundoff; the SGD phase is bit-exact given the same start)."""
+    from repro.sgd import run_streaming_hybrid
+    r, rte, grid_u, tiles_u, sched_sgd_u = _sgd_problem(g=4, n_workers=2)
+    rtest = als_mod.ell_triplet(rte)
+    als_cfg = als_mod.AlsConfig(f=SPEC.f, lam=SPEC.lam, iters=2, mode="ref")
+    cfg = _sgd_cfg(epochs=2)
+
+    store_u = RatingStore(r, q=4)
+    plan_u = _forced_plan(r, q=4, n_data=2, store=store_u)
+    als_sched_u = build_schedule(plan_u, SPEC.m, SPEC.n, n_data=2)
+    fac_u, hist_u, _ = run_streaming_hybrid(
+        store_u, als_sched_u, tiles_u, sched_sgd_u, als_cfg, cfg,
+        test_eval=rtest, ckpt_dir=str(tmp_path / "hyb_u"))
+
+    store_b = RatingStore(r, q=4, n_bins=4)
+    acc_eps = SPEC.n * (SPEC.f * SPEC.f + 3 * SPEC.f + 1) * 4
+    plan_b = plan_for(SPEC.m, SPEC.n, r.nnz, SPEC.f, p=1, q=4, n_data=2,
+                      bin_fills=store_b.bin_fill_pairs(), eps=acc_eps,
+                      buffers=4, hbm_bytes=1 << 22)
+    als_sched_b = build_schedule(plan_b, SPEC.m, SPEC.n, n_data=2)
+    grid_b = block_ell(r, g=4, per_tile_k=True)
+    tiles_b = TileStore(grid_b)
+    sched_sgd_b = build_sgd_schedule(grid_b, SPEC.f, n_workers=2)
+    fac_b, hist_b, _ = run_streaming_hybrid(
+        store_b, als_sched_b, tiles_b, sched_sgd_b, als_cfg, cfg,
+        test_eval=rtest, ckpt_dir=str(tmp_path / "hyb_b"))
+
+    np.testing.assert_allclose(fac_b.x, fac_u.x, atol=1e-5)
+    np.testing.assert_allclose(fac_b.theta, fac_u.theta, atol=1e-5)
+    for a, b in zip(hist_b, hist_u):
+        assert a["phase"] == b["phase"]
+        assert abs(a["test_rmse"] - b["test_rmse"]) < 1e-5
