@@ -60,7 +60,8 @@ def iteration_time_s(spec, chips=256, f_pad=None):
 
 
 def measure_outofcore(iters: int = 2, seed: int = 0,
-                      scale: float = 0.02) -> list[dict]:
+                      scale: float = 0.02,
+                      autotune: bool = False) -> list[dict]:
     """Measured streaming path: waves >= 2 on a capped simulated CPU device.
 
     Runs the real ``repro.outofcore`` driver on a shrunk Netflix recipe with
@@ -144,18 +145,99 @@ def measure_outofcore(iters: int = 2, seed: int = 0,
          f"fill_waste {uni['fill_waste_ratio']:.3f} -> "
          f"{binned['fill_waste_ratio']:.3f} ({ratio:.2f}x, n_bins="
          f"{binned['n_bins']})")
+    if autotune:
+        records += measure_outofcore_autotune(iters=iters, seed=seed,
+                                              scale=scale)
     records += measure_outofcore_mesh(iters=iters, seed=seed)
     return records
+
+
+def measure_outofcore_autotune(iters: int = 2, seed: int = 0,
+                               scale: float = 0.02) -> list[dict]:
+    """Autotuned streaming row (``--autotune``): the same shrunk-Netflix
+    problem with ``n_bins="auto"`` — the cuMF Alg.-2 sweep picks the layout.
+
+    Asserts the sweep's contract end to end: the chosen config's predicted
+    streamed bytes are <= EVERY hand-picked ladder rung's, and the driver's
+    measured ``bytes_streamed`` per iteration equals the winning score
+    exactly (the analytic sweep prices the same integers the meter counts).
+    The decision record (config, cache hit/miss, key, score) rides on the
+    row under ``autotune`` and in the run's ledger run context.
+    """
+    from repro.core import als as als_mod
+    from repro.outofcore import (RatingStore, build_schedule,
+                                 run_streaming_als)
+    from repro.sparse import synth
+
+    q, n_data = 4, 2
+    spec = synth.scaled(DATASETS["netflix"], scale, f=16)
+    r, _, _, _ = synth.make_synthetic_ratings(spec, seed=seed)
+    store = RatingStore(r, q=q, n_bins="auto")
+    assert store.tune is not None and not store.tune["cache_hit"]
+    acc_eps = spec.n * (spec.f * spec.f + 3 * spec.f + 1) * 4
+    if store.n_bins > 1:
+        plan = plan_for(spec.m, spec.n, r.nnz, spec.f, p=1, q=q,
+                        n_data=n_data, bin_fills=store.bin_fill_pairs(),
+                        eps=acc_eps, buffers=4)
+    else:
+        plan = plan_for(spec.m, spec.n, r.nnz, spec.f, p=1, q=q,
+                        n_data=n_data, fill=store.worst_fill,
+                        eps=acc_eps, buffers=4)
+    sched = build_schedule(plan, spec.m, spec.n, n_data=n_data)
+    cfg = als_mod.AlsConfig(f=spec.f, lam=spec.lam, iters=iters, mode="ref")
+    _, _, tel = run_streaming_als(store, sched, cfg)
+    # re-run the sweep (same inputs, no cache) just for the rung table the
+    # row carries; the winner must undercut every hand-picked rung
+    from repro.core.autotune import tune_als_layout
+    sweep = tune_als_layout(r, q=q, p=1, f=spec.f)
+    assert sweep.config.to_obj() == store.tune["config"], (sweep, store.tune)
+    assert all(sweep.score <= c["score"] for c in sweep.candidates), \
+        sweep.candidates
+    assert tel.bytes_streamed == sweep.score * iters, \
+        (tel.bytes_streamed, sweep.score, iters)
+    rec = {
+        "name": f"outofcore_q{q}_w{len(sched.waves)}_autotuned",
+        "m": spec.m, "n": spec.n, "nnz": r.nnz, "f": spec.f,
+        "p": 1, "q": q, "n_data": n_data, "waves": len(sched.waves),
+        "iters": iters, "n_bins": store.n_bins,
+        "autotune": store.tune,
+        "autotune_ladder": [{"config": c["config"], "score": c["score"]}
+                            for c in sweep.candidates],
+        "measured_iter_s": tel.wall_seconds / iters,
+        "wall_seconds": tel.wall_seconds,
+        "phase_seconds": {k: round(v, 4)
+                          for k, v in tel.phase_seconds.items()},
+        "bytes_streamed_per_iter": tel.bytes_streamed // iters,
+        "peak_device_bytes": tel.peak_bytes,
+        "capacity_bytes": tel.capacity_bytes,
+        "fits": tel.peak_bytes <= tel.capacity_bytes,
+        "padded_slots": tel.padded_slots,
+        "nnz_streamed": tel.nnz_streamed,
+        "fill_waste_ratio": round(tel.fill_waste_ratio, 6),
+        "ledger_ok": tel.ledger.get("ok", False),
+    }
+    _write_ledger(tel)
+    emit(rec["name"], rec["measured_iter_s"] * 1e6,
+         f"measured;auto_n_bins={store.n_bins};"
+         f"predicted_bytes_per_iter={sweep.score};"
+         f"cache_hit={store.tune['cache_hit']};"
+         f"streamed_MiB_per_iter="
+         f"{rec['bytes_streamed_per_iter'] / 2**20:.1f}")
+    return [rec]
 
 
 def measure_outofcore_mesh(iters: int = 2, seed: int = 0) -> list[dict]:
     """Measured p > 1 streaming row: the same wave driver on a real
     (data=2, model=2) mesh — theta as p shards, waves shard-mapped, the
-    accumulate half combined by the topology-aware reduction.  Skipped
-    (with a CSV note) when fewer than 4 devices are visible; CI's
-    bench-smoke forces 8 host devices so the row is always present there.
+    accumulate half combined by the topology-aware reduction, and (new)
+    the theta half streamed as batch-uniform stacked degree bins
+    (``n_bins > 1`` with ``p > 1``).  Factors are checked against the
+    in-core single-device trajectory.  Skipped (with a CSV note) when
+    fewer than 4 devices are visible; CI's bench-smoke forces 8 host
+    devices so the row is always present there.
     """
     import jax
+    import numpy as np
 
     from repro.core import als as als_mod
     from repro.core.partition import streaming_acc_bytes
@@ -164,28 +246,38 @@ def measure_outofcore_mesh(iters: int = 2, seed: int = 0) -> list[dict]:
     from repro.launch.mesh import make_mesh
     from repro.sparse import synth
 
-    n_data, p, q = 2, 2, 4
+    n_data, p, q, n_bins = 2, 2, 4, 4
     if len(jax.devices()) < n_data * p:
         emit("outofcore_mesh_skipped", 0.0,
              f"needs {n_data * p} devices, have {len(jax.devices())};"
              "run under --xla_force_host_platform_device_count=8")
         return []
     spec = synth.SynthSpec("netflix-mesh", 2048, 512, 80_000, 16, 0.05)
-    r, _, _, _ = synth.make_synthetic_ratings(spec, seed=seed)
-    store = RatingStore(r, q=q, p=p)
+    r, rt, _, _ = synth.make_synthetic_ratings(spec, seed=seed)
+    store = RatingStore(r, q=q, p=p, n_bins=n_bins)
     plan = plan_for(spec.m, spec.n, r.nnz, spec.f, p=p, q=q, n_data=n_data,
-                    fill=store.worst_fill, eps=0, buffers=4,
+                    bin_fills=store.bin_fill_pairs(), eps=0, buffers=4,
                     acc_bytes=streaming_acc_bytes(spec.n, spec.f))
     sched = build_schedule(plan, spec.m, spec.n, n_data=n_data)
     mesh = make_mesh((n_data, p), ("data", "model"))
     cfg = als_mod.AlsConfig(f=spec.f, lam=spec.lam, iters=iters, mode="ref")
-    _, _, tel = run_streaming_als(store, sched, cfg, mesh=mesh)
+    fac, _, tel = run_streaming_als(store, sched, cfg, mesh=mesh)
+    # zero-drift: the stacked binned mesh run matches the in-core
+    # single-device trajectory (stack padding rows are exact zeros)
+    state, _ = als_mod.als_train(als_mod.ell_triplet(r),
+                                 als_mod.ell_triplet(rt),
+                                 r.m, rt.m, cfg)
+    parity = bool(
+        np.abs(fac.x[:r.m] - np.asarray(state.x)).max() < 1e-4
+        and np.abs(fac.theta - np.asarray(state.theta)).max() < 1e-4)
+    assert parity, "stacked mesh factors drifted from in-core"
     iter_s = tel.wall_seconds / iters
     rec = {
-        "name": f"outofcore_mesh_p{p}_q{q}_w{len(sched.waves)}",
+        "name": f"outofcore_mesh_p{p}_q{q}_w{len(sched.waves)}_binned",
         "m": spec.m, "n": spec.n, "nnz": r.nnz, "f": spec.f,
         "p": p, "q": q, "n_data": n_data, "waves": len(sched.waves),
-        "iters": iters,
+        "iters": iters, "n_bins": n_bins,
+        "factors_match_incore": parity,
         "measured_iter_s": iter_s,
         "wall_seconds": tel.wall_seconds,
         "phase_seconds": {k: round(v, 4)
@@ -206,13 +298,13 @@ def measure_outofcore_mesh(iters: int = 2, seed: int = 0) -> list[dict]:
     }
     _write_ledger(tel)
     emit(rec["name"], iter_s * 1e6,
-         f"measured;mesh=data{n_data}xmodel{p};peak_MiB="
+         f"measured;mesh=data{n_data}xmodel{p};n_bins={n_bins};peak_MiB="
          f"{tel.peak_bytes / 2**20:.1f};cap_MiB="
          f"{tel.capacity_bytes / 2**20:.1f};reduce={tel.topology}")
     return [rec]
 
 
-def run(quick: bool = False):
+def run(quick: bool = False, autotune: bool = False):
     for name, spec in DATASETS.items():
         t, comp, mem, red = iteration_time_s(spec)
         plan = plan_partitions(spec.m, spec.n, spec.nnz, spec.f)
@@ -228,7 +320,8 @@ def run(quick: bool = False):
         emit(f"fig11_huge_{name}", t * 1e6, derived)
     # quick (CI smoke): fewer iterations on a smaller shrink factor
     return measure_outofcore(iters=1 if quick else 2,
-                             scale=0.008 if quick else 0.02)
+                             scale=0.008 if quick else 0.02,
+                             autotune=autotune)
 
 
 if __name__ == "__main__":

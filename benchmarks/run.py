@@ -57,6 +57,10 @@ def main(argv=None) -> None:
     ap.add_argument("--only", action="append", default=[], metavar="NAME",
                     help="run only the named benchmark (repeatable); "
                          f"names: {', '.join(n for n, _ in MODULES)}")
+    ap.add_argument("--autotune", action="store_true",
+                    help="let benchmarks that take an `autotune` keyword "
+                         "add autotuned-layout rows (cuMF Alg.-2 sweep via "
+                         "repro.core.autotune; see TUNING.md)")
     ap.add_argument("--trace", default=None, metavar="OUT.json",
                     help="record obs spans across every selected benchmark "
                          "and write one Chrome-trace/Perfetto JSON file")
@@ -97,8 +101,11 @@ def main(argv=None) -> None:
                 continue
             mod = importlib.import_module(f"benchmarks.{modname}")
             kwargs = {}
-            if args.quick and "quick" in inspect.signature(mod.run).parameters:
+            params = inspect.signature(mod.run).parameters
+            if args.quick and "quick" in params:
                 kwargs["quick"] = True
+            if args.autotune and "autotune" in params:
+                kwargs["autotune"] = True
             out = mod.run(**kwargs)
             json_out = getattr(mod, "JSON_OUT", None)
             if json_out and out:

@@ -106,6 +106,15 @@ def _build_mesh(args):
     return make_mesh((d, p), ("data", "model")), p
 
 
+def _tune_cache(args):
+    """--autotune: a persistent TuneCache under the checkpoint dir, so a
+    restarted run reuses the sweep's winner instead of re-sweeping."""
+    if not getattr(args, "autotune", False):
+        return None
+    os.makedirs(args.ckpt, exist_ok=True)
+    return os.path.join(args.ckpt, "tune_cache.json")
+
+
 def _als_store_and_schedule(spec, r, args, p=1):
     """Capped-capacity ALS wave plan: store + schedule (shared with hybrid)."""
     from repro.core.partition import streaming_acc_bytes
@@ -124,21 +133,32 @@ def _als_store_and_schedule(spec, r, args, p=1):
     if spec.n % p:
         raise SystemExit(f"n={spec.n} is not divisible by the model axis "
                          f"size p={p}; pick a p that divides n")
-    store = RatingStore(r, q=plan.q, p=p)
+    n_bins = "auto" if args.autotune else 1
+    store = RatingStore(r, q=plan.q, p=p, n_bins=n_bins,
+                        tune_cache=_tune_cache(args))
+    if store.tune is not None:
+        print(f"autotune: n_bins={store.n_bins} "
+              f"k_multiple={store.tune['config']['k_multiple']} "
+              f"predicted {store.tune['score']} {store.tune['unit']}/iter "
+              f"(cache_{'hit' if store.tune['cache_hit'] else 'miss'})")
     # re-cost the chosen (p, q) with the store's real padding fills and the
     # double-buffer count (depth=2 queued + loader-held + consumed): that
     # total is the budget the meter reports against.  p > 1 prices the
-    # Hermitian accumulators as their own p-sharded term.
+    # Hermitian accumulators as their own p-sharded term; a binned store
+    # prices its per-bin pairs instead of the scalar worst fill.
+    fill_kw = (dict(bin_fills=store.bin_fill_pairs()) if store.n_bins > 1
+               else dict(fill=store.worst_fill))
     if p > 1:
         plan = plan_for(spec.m, spec.n, r.nnz, spec.f, p=p, q=plan.q,
                         n_data=args.n_data, hbm_bytes=cap,
-                        fill=store.worst_fill, eps=cap // 8, buffers=4,
-                        acc_bytes=streaming_acc_bytes(spec.n, spec.f))
+                        eps=cap // 8, buffers=4,
+                        acc_bytes=streaming_acc_bytes(spec.n, spec.f),
+                        **fill_kw)
     else:
         acc_eps = spec.n * (spec.f * spec.f + 3 * spec.f + 1) * 4
         plan = plan_for(spec.m, spec.n, r.nnz, spec.f, p=plan.p, q=plan.q,
                         n_data=args.n_data, hbm_bytes=cap,
-                        fill=store.worst_fill, eps=acc_eps, buffers=4)
+                        eps=acc_eps, buffers=4, **fill_kw)
     print(f"out-of-core plan: {plan.describe()}")
     sched = build_schedule(plan, spec.m, spec.n, n_data=args.n_data)
     need = required_capacity_bytes(store, sched, spec.f)
@@ -154,7 +174,14 @@ def _sgd_tiles_and_schedule(spec, r, args):
                                  sgd_required_capacity_bytes)
     from repro.sgd import block_ell
 
-    grid = block_ell(r, g=args.g)
+    grid = block_ell(r, g=args.g,
+                     per_tile_k="auto" if args.autotune else False,
+                     tune_cache=_tune_cache(args))
+    if grid.tune is not None:
+        print(f"autotune: per_tile_k={grid.tune['config']['per_tile_k']} "
+              f"degree_sort={grid.tune['config']['degree_sort']} "
+              f"({grid.tune['score']} dispatched slots, "
+              f"cache_{'hit' if grid.tune['cache_hit'] else 'miss'})")
     print(f"block grid: g={grid.g} mb={grid.mb} nb={grid.nb} K={grid.K} "
           f"fill={grid.fill:.2f}x")
     cap = args.device_mb << 20
@@ -267,7 +294,13 @@ def run_sgd(spec, r, rt, rte, args):
     from repro.core import als as als_mod
     from repro.sgd import SgdConfig, block_ell, hybrid_train, sgd_train
 
-    grid = block_ell(r, g=args.g)
+    grid = block_ell(r, g=args.g,
+                     per_tile_k="auto" if args.autotune else False,
+                     tune_cache=_tune_cache(args))
+    if grid.tune is not None:
+        print(f"autotune: per_tile_k={grid.tune['config']['per_tile_k']} "
+              f"degree_sort={grid.tune['config']['degree_sort']} "
+              f"({grid.tune['score']} dispatched slots)")
     print(f"block grid: g={grid.g} mb={grid.mb} nb={grid.nb} K={grid.K} "
           f"fill={grid.fill:.2f}x")
     sgd_cfg = SgdConfig(f=spec.f, lam=spec.lam, lr=args.sgd_lr,
@@ -317,6 +350,11 @@ def main():
     ap.add_argument("--g", type=int, default=4,
                     help="block-grid side for the SGD solvers")
     ap.add_argument("--ckpt", default="/tmp/cumf_ckpt")
+    ap.add_argument("--autotune", action="store_true",
+                    help="pick the layout knobs (ALS n_bins/k_multiple, "
+                         "SGD per_tile_k/degree_sort) by the cuMF Alg.-2 "
+                         "sweep (repro.core.autotune); the winner is "
+                         "cached under --ckpt (see TUNING.md)")
     ap.add_argument("--out-of-core", action="store_true",
                     help="stream waves through a capped simulated device")
     ap.add_argument("--device-mb", type=int, default=64,

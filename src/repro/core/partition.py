@@ -118,6 +118,10 @@ def plan_for(
     buffers: int = 1,
     acc_bytes: int = 0,
     bin_fills: Optional[Sequence[Tuple[int, int]]] = None,
+    auto: bool = False,
+    degrees=None,
+    tune_cache=None,
+    k_multiple: int = 8,
 ) -> PartitionPlan:
     """Cost a *given* (p, q) choice — the forced-plan entry point.
 
@@ -137,7 +141,24 @@ def plan_for(
     overrides the scalar ``fill``.  On power-law data this is a multi-x
     reduction of the R_shard term, which is exactly where binning buys its
     capacity headroom.
+
+    ``auto=True`` derives ``bin_fills`` itself: ``degrees`` (the per-row
+    nnz counts) is swept through ``repro.core.autotune.tune_plan_fills`` —
+    argmin of padded slots over the (n_bins, k_multiple) ladder, cached in
+    ``tune_cache`` — and the winning rung's per-bin pairs price R_shard.
     """
+    if auto:
+        from repro.core import autotune as _autotune
+        assert degrees is not None, \
+            "plan_for(auto=True) needs degrees= (per-row nnz counts)"
+        res = _autotune.tune_plan_fills(
+            m, n, nnz, f, p, q, degrees=degrees, k_multiple=k_multiple,
+            cache=tune_cache)
+        want = res.config.to_obj()
+        for cand in res.candidates:
+            if cand["config"] == want:
+                bin_fills = cand["bin_fills"]
+                break
     if bin_fills:
         slots = sum(int(s) for s, _ in bin_fills)
         true_nnz = sum(int(z) for _, z in bin_fills)

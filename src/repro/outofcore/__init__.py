@@ -60,9 +60,20 @@ Paper vocabulary -> implementation map:
   4. Planner pricing goes through ``RatingStore.bin_fill_pairs()`` ->
      ``plan_for(bin_fills=...)``; the ledger's ``fill_waste_ratio`` and
      per-component ``fill_bound/*`` records measure the binned layout.
-  5. Binned + mesh (``p > 1``) is an explicit ROADMAP follow-up: the
-     store asserts ``p == 1`` when ``n_bins > 1`` (theta-half shard
-     stacking needs batch-uniform item bins).
+  5. Binned + mesh (``p > 1``): the theta half streams batch-uniform
+     stacked bins (``RatingStore.rt_stacked``, bin caps chosen globally
+     over all q batches so every batch's bin presents one shape the mesh
+     herm stack can shard; per-batch membership varies and rides in each
+     stack's ``items`` scatter map).  The solve-X half keeps the uniform
+     mesh layout.  Stack padding rows carry cnt = 0 and contribute
+     exact-zero partials, so the f64 accumulators — and therefore
+     checkpoints and the topology reduce — are bit-identical to a
+     uniform run's.
+  6. ``n_bins="auto"`` (and the SGD side's ``per_tile_k="auto"``) route
+     through ``repro.core.autotune``: argmin of predicted streamed bytes
+     over the config ladder, cached per (shape, skew, topology, backend);
+     the chosen config and cache hit/miss are recorded in the ledger run
+     context (``autotune``).
 
   The SGD side gets the same treatment at tile granularity:
   ``sgd.blocking.block_coo(per_tile_k=True, degree_sort=True)`` records a

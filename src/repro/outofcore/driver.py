@@ -150,11 +150,15 @@ def run_streaming_als(
     ``phase_seconds`` breakdown, which each history record also carries as
     its per-iteration delta.
 
-    With a degree-binned ``RatingStore`` (``n_bins > 1``, p = 1 only) both
-    halves stream bin-wise cuts and dispatch the kernels once per bin at
-    that bin's own K — identical factor trajectory (padding slots are exact
+    With a degree-binned ``RatingStore`` (``n_bins > 1``) both halves
+    stream bin-wise cuts and dispatch the kernels once per bin at that
+    bin's own K — identical factor trajectory (padding slots are exact
     zeros), strictly fewer streamed slots/bytes; the ``update_rows_fn`` /
-    ``partial_herm_fn`` hooks are bypassed on this path.
+    ``partial_herm_fn`` hooks are bypassed on this path.  Binned + mesh
+    (``p > 1``): the accumulate-Theta half streams the store's
+    batch-uniform stacked bins (``rt_stacked``) — one ``wave_herm``
+    dispatch per bin, partials host-scattered through the ``items`` maps —
+    while the solve-X half keeps the uniform mesh layout.
 
     With ``mesh`` set (axes ``("data", "model")``, sizes matching
     ``sched.n_data`` and ``sched.p``) every wave executes shard-mapped on
@@ -179,12 +183,17 @@ def run_streaming_als(
         lambda A, B, c: als_mod.solve_accumulated(A, B, c, cfg))
 
     # degree-binned store: waves stream bin-wise cuts and dispatch the
-    # kernels once per bin at that bin's K (p=1 only — the store enforces it)
+    # kernels once per bin at that bin's K.  p = 1 binned runs cut both
+    # halves bin-wise; on a mesh the theta half streams the batch-uniform
+    # stacked bins (rt_stacked) while solve-X keeps the uniform mesh layout.
     n_bins = getattr(ratings, "n_bins", 1)
     binned = n_bins > 1
-    assert not binned or mesh is None, \
-        "binned streaming is p=1 only; build the RatingStore with n_bins=1 " \
-        "to stream on a mesh (see ROADMAP)"
+    stacked = getattr(ratings, "rt_stacked", None)
+    assert not (binned and mesh is None and stacked is not None), \
+        "stacked (p > 1) binned stores require mesh= to stream"
+    assert not (binned and mesh is not None and stacked is None), \
+        "mesh streaming of a binned store needs batch-uniform bins; " \
+        "build the RatingStore with p > 1 so rt_stacked exists"
 
     p = 1
     if mesh is not None:
@@ -612,6 +621,89 @@ def run_streaming_als(
         finally:
             meter.free("acc")
 
+    def _theta_half_mesh_binned(it: int, first_wave: int, acc0=None):
+        """Mesh theta half over the batch-uniform stacked bins: one
+        ``wave_herm`` dispatch per bin per wave (one compiled shape per
+        bin — ``make_wave_herm_fn`` is shape-polymorphic), partials
+        host-scattered into the per-data-shard f64 accumulators through
+        each stack's ``items`` map.  Padding rows/batches carry cnt = 0
+        and produce exact-zero partials, so scattering them (``np.add.at``,
+        duplicate-safe) changes nothing; the checkpoint tree is identical
+        to the uniform mesh half's, so kill/resume stays bit-exact and
+        layout-agnostic."""
+        acc_shard = n * (f * f + f + 1) * 4 // p
+        meter.alloc("acc", acc_shard)
+        if acc0 is not None:
+            A_dev = np.asarray(acc0[0], np.float64).copy()
+            B_dev = np.asarray(acc0[1], np.float64).copy()
+            c_dev = np.asarray(acc0[2], np.float64).copy()
+        else:
+            A_dev = np.zeros((n_data, n, f, f), np.float64)
+            B_dev = np.zeros((n_data, n, f), np.float64)
+            c_dev = np.zeros((n_data, n), np.float64)
+
+        def gen():
+            for wave in sched.waves[first_wave:]:
+                bins = ratings.theta_wave_stacked(
+                    [b.index for b in wave.batches])
+                xs = [factors.read_slice("x", b.row_start, b.row_stop)
+                      for b in wave.batches]
+                yield wave, bins, xs
+
+        def put(item):
+            wave, bins, xs = item
+            nbatch = len(xs)
+            trip_nb = sum(int(i.nbytes + v.nbytes + c.nbytes)
+                          for i, v, c, _ in bins)
+            x_nb = sum(x.nbytes for x in xs)
+            slots = sum(i.size for i, _v, _c, _it in bins)
+            nz = sum(int(c.sum()) for _i, _v, c, _it in bins)
+            reg.counter("padded_slots").inc(slots)
+            reg.counter("nnz_streamed").inc(nz)
+            reg.counter("t_padded_slots").inc(slots)
+            reg.counter("t_nnz_streamed").inc(nz)
+            meter.alloc(f"twave{wave.index}",
+                        trip_nb // (nbatch * p) + x_nb // nbatch)
+            pad = n_data - nbatch
+            x_stack = np.stack(xs)
+            if pad:      # ragged last wave: empty batches contribute A = 0
+                z3 = ((0, pad), (0, 0), (0, 0))
+                bins = [(np.pad(i, z3), np.pad(v, z3),
+                         np.pad(c, ((0, pad), (0, 0))), items)
+                        for i, v, c, items in bins]
+                x_stack = np.pad(x_stack, z3)
+            return wave, (x_stack, bins, nbatch), trip_nb + x_nb
+
+        try:
+            with Prefetcher(gen(), depth=prefetch_depth, put=put,
+                            tracer=tracer, registry=reg) as pf:
+                for wave, (x_stack, bins, nbatch), nb in pf:
+                    with phase("als.wave_theta", cat="solve", tracer=tracer,
+                               registry=reg, wave=wave.index,
+                               iteration=it + 1, bytes=nb, mesh=True,
+                               bins=len(bins)):
+                        for idx_b, val_b, cnt_b, items_b in bins:
+                            A_w, B_w = wave_herm(x_stack, idx_b, val_b,
+                                                 cnt_b)
+                            A_w = np.asarray(A_w, np.float64)
+                            B_w = np.asarray(B_w, np.float64)
+                            for d in range(nbatch):
+                                np.add.at(A_dev[d], items_b[d], A_w[d])
+                                np.add.at(B_dev[d], items_b[d], B_w[d])
+                                np.add.at(c_dev[d], items_b[d],
+                                          cnt_b[d].astype(np.float64))
+                    meter.free(f"twave{wave.index}")
+                    reg.counter("waves_run").inc()
+                    reg.counter("batches_loaded").inc(len(wave.batches))
+                    reg.counter("bytes_streamed").inc(nb)
+                    last = wave.index == W - 1
+                    if last:
+                        _reduce_and_solve(A_dev, B_dev, c_dev)
+                    _save(it * wpi + W + wave.index + 1,
+                          acc=None if last else (A_dev, B_dev, c_dev))
+        finally:
+            meter.free("acc")
+
     def _reduce_and_solve(A_dev, B_dev, c_dev):
         """Combine per-data-shard partials (paper Fig. 5b schedule), then
         each model shard solves and writes back its own theta rows."""
@@ -637,7 +729,8 @@ def run_streaming_als(
 
     x_half = (_x_half_mesh if mesh is not None
               else _x_half_binned if binned else _x_half)
-    theta_half = (_theta_half_mesh if mesh is not None
+    theta_half = (_theta_half_mesh_binned if mesh is not None and binned
+                  else _theta_half_mesh if mesh is not None
                   else _theta_half_binned if binned else _theta_half)
 
     # ------------------------------------------------------------------
@@ -718,6 +811,7 @@ def run_streaming_als(
                  n_data=n_data, waves=W, iterations=cfg.iters - it0,
                  f=f, m_pad=m_pad, n=n, mode=cfg.mode, n_bins=n_bins,
                  resumed_from_step=start_step, topology=topo_desc,
+                 autotune=getattr(ratings, "tune", None),
                  phase_seconds=reg.phase_seconds())
     led.record("peak_device_bytes", sched.capacity_bytes, meter.peak_bytes,
                unit="bytes", check="le")

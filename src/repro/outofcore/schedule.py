@@ -266,15 +266,19 @@ def required_capacity_bytes(store, sched: IterationSchedule, f: int,
     half stays replicated across the model axis (every shard's partial
     Hermitian reads the whole batch).
 
-    A degree-binned store (``n_bins > 1``, p = 1 only) streams bin-wise
-    cuts: per-wave payloads vary with where each bin's rows fall, so the
-    model bounds every wave by the maximum per-batch payload — still
-    ``le`` vs the meter, and never above the uniform-K model.
+    A degree-binned store streams bin-wise cuts: at p = 1 per-wave
+    payloads vary with where each bin's rows fall, so the model bounds
+    every wave by the maximum per-batch payload — still ``le`` vs the
+    meter, and never above the uniform-K model.  At p > 1 the theta half
+    streams the batch-uniform stacks (``rt_stacked``): every batch
+    presents the same per-bin shapes, so its payload is one exact
+    constant per batch.
     """
     n_data, p = sched.n_data, sched.p
     wave_rows = sched.waves[0].rows
     bufs = prefetch_depth + 2
     binned = getattr(store, "r_binned", None) is not None
+    stacked = getattr(store, "rt_stacked", None)
     # solve-X half: resident Theta shard + wave triplets + solve scratch
     theta_bytes = store.n * f * 4 // p
     if binned:
@@ -295,6 +299,11 @@ def required_capacity_bytes(store, sched: IterationSchedule, f: int,
         from repro.outofcore.store import binned_nbytes
         t_payload = max(binned_nbytes(b) for b in store.rt_binned) \
             + (sched.m_pad // q) * f * 4
+    elif stacked is not None:
+        # one batch's per-bin triplets, 1/p on each device (rows_b rows are
+        # sharded over the model axis), plus the replicated fresh X slice
+        batch_trip = sum(st.rows * (st.K * 8 + 4) for st in stacked)
+        t_payload = batch_trip // p + (sched.m_pad // q) * f * 4
     else:
         t_payload = n * (K_loc * 8 + 4) // p + (sched.m_pad // q) * f * 4
     t_half = acc_bytes + bufs * t_payload + n * f * 4 // p
@@ -340,7 +349,11 @@ def predicted_stream_stats(store, sched: IterationSchedule, f: int) -> dict:
     shapes).  On a degree-binned store the per-wave numbers sum each bin's
     contiguous span at that bin's own K (``x_slice_binned`` /
     ``theta_batch_binned``'s exact shapes) — still exact integers, so the
-    ledger's ``fill_waste_ratio`` stays an equality under binning.
+    ledger's ``fill_waste_ratio`` stays an equality under binning.  A
+    stacked store (``p > 1`` with ``n_bins > 1``) prices the theta half
+    from the batch-uniform ``rt_stacked`` shapes (``theta_wave_stacked``'s
+    exact per-batch payloads) while the solve-X side stays on the uniform
+    mesh layout.
     """
     p = sched.p
     binned = getattr(store, "r_binned", None) is not None
@@ -367,6 +380,7 @@ def predicted_stream_stats(store, sched: IterationSchedule, f: int) -> dict:
             x_slots.append(w.rows * per_row_slots)
             x_nnz.append(int(cnt_rows[w.row_start:w.row_stop].sum()))
     q, n, K_t = store.rt_parts.idx.shape
+    stacked = getattr(store, "rt_stacked", None)
     t_bytes, t_slots, t_nnz = [], [], []
     if binned:
         from repro.outofcore.store import binned_nbytes
@@ -377,6 +391,18 @@ def predicted_stream_stats(store, sched: IterationSchedule, f: int) -> dict:
                 shard_bytes[b.index] + (b.row_stop - b.row_start) * f * 4
                 for b in w.batches))
             t_slots.append(sum(shard_slots[b.index] for b in w.batches))
+            t_nnz.append(sum(int(store.rt_parts.cnt[b.index].sum())
+                             for b in w.batches))
+    elif stacked is not None:
+        # batch-uniform stacks: every batch streams the same per-bin shapes
+        # (rows_b x K_b triplets), so one constant prices all batches
+        batch_trip = sum(st.rows * (st.K * 8 + 4) for st in stacked)
+        batch_slots = sum(st.rows * st.K for st in stacked)
+        for w in sched.waves:
+            t_bytes.append(sum(
+                batch_trip + (b.row_stop - b.row_start) * f * 4
+                for b in w.batches))
+            t_slots.append(len(w.batches) * batch_slots)
             t_nnz.append(sum(int(store.rt_parts.cnt[b.index].sum())
                              for b in w.batches))
     else:

@@ -298,6 +298,7 @@ def run_streaming_sgd(
                  epochs=cfg.epochs - ep0, mode=cfg.mode,
                  per_tile_k=tiles.grid.tile_K is not None,
                  degree_sorted=tiles.grid.user_perm is not None,
+                 autotune=getattr(tiles.grid, "tune", None),
                  resumed_from_step=start_step,
                  phase_seconds=reg.phase_seconds())
     led.record("peak_device_bytes", sched.capacity_bytes, meter.peak_bytes,

@@ -14,9 +14,14 @@ shards (``r_binned``, one ``BinnedELL`` per R^T user-batch in
 ``rt_binned``): the wave driver streams each wave's rows cut bin-wise
 (``x_slice_binned`` / ``theta_batch_binned``) so heavy rows pay a large K
 and light rows a small one — cuMF's degree binning applied to the
-streaming layout.  Binned stores are p=1 only for now: mesh streaming
-stacks theta-half shards ``[n_data, n, K]``, which needs batch-uniform
-item bins (see ROADMAP).
+streaming layout.  With ``p > 1`` (mesh streaming) the theta half instead
+carries batch-uniform stacked bins (``rt_stacked``, one
+``sparse.padded.BinShardStack`` per bin): bin caps are chosen globally
+across all q batches so every batch's bin presents one ``[rows_b, K_b]``
+shape the mesh herm stack can shard, while per-batch membership stays
+free (the ``items`` scatter map carries it).  ``n_bins="auto"`` consults
+the layout autotuner (``repro.core.autotune``) and records the chosen
+config in ``RatingStore.tune`` for the ledger.
 
 Factors live in ``FactorStore`` as plain numpy arrays; the driver reads
 slices onto device and writes solved slices back, so device memory only ever
@@ -29,9 +34,10 @@ from typing import Tuple
 
 import numpy as np
 
-from repro.sparse.padded import (BinnedELL, PaddedELL, bin_padded,
-                                 csr_from_coo, pad_csr_fast, pad_rows,
-                                 partition_padded, row_slice)
+from repro.sparse.padded import (BinnedELL, BinShardStack, PaddedELL,
+                                 bin_padded, csr_from_coo, pad_csr_fast,
+                                 pad_rows, partition_padded, row_slice,
+                                 stack_binned_parts)
 
 Triplet = Tuple[np.ndarray, np.ndarray, np.ndarray]
 
@@ -115,15 +121,29 @@ class RatingStore:
     orientations (``bin_padded`` re-bins the uniform layouts in place, no
     COO round trip): the driver then streams each wave bin-wise through
     ``x_slice_binned`` / ``theta_batch_binned``, cutting padded slots from
-    ``fill`` x nnz down to the per-bin sum.  Requires ``p == 1``.
+    ``fill`` x nnz down to the per-bin sum.  With ``p > 1`` the theta half
+    is binned batch-uniform instead (``rt_stacked``, globally-chosen caps)
+    so the bins stream on a real (data, model) mesh; the solve-X half stays
+    on the uniform mesh layout (``x_slice_mesh_triplet``).
+
+    ``n_bins="auto"`` resolves the bin count (and bin ``k_multiple``)
+    through ``repro.core.autotune.tune_als_layout`` — argmin of predicted
+    streamed bytes over the config ladder, cached in ``tune_cache`` (a
+    ``repro.core.autotune.TuneCache`` or path) — and records the decision
+    in ``self.tune`` for the driver's ledger run context.
     """
 
     def __init__(self, r: PaddedELL, q: int, k_multiple: int = 8, p: int = 1,
-                 n_bins: int = 1):
+                 n_bins=1, tune_cache=None):
+        self.tune = None
+        if n_bins == "auto":
+            from repro.core import autotune as _autotune
+            res = _autotune.tune_als_layout(
+                r, q=q, p=p, k_multiple=k_multiple, cache=tune_cache)
+            n_bins = res.config.n_bins
+            k_multiple = res.config.k_multiple
+            self.tune = res.to_obj()
         assert q >= 1 and p >= 1 and n_bins >= 1
-        assert p == 1 or n_bins == 1, \
-            "binned mesh streaming is not supported yet (see ROADMAP): " \
-            "theta-half mesh stacking needs batch-uniform item bins"
         self.m = r.m                       # true (unpadded) user count
         self.n = r.n_cols                  # item count
         self.q = q
@@ -147,18 +167,26 @@ class RatingStore:
         self.r_model_parts = (partition_padded(self.r, p,
                                                k_multiple=k_multiple)
                               if p > 1 else None)
-        # n_bins > 1: degree-binned shards of both orientations.  r_binned
-        # keeps m_pad rows (empty padding rows land in the smallest bin),
-        # rt_binned holds one BinnedELL per R^T user-batch — each shard
-        # re-binned independently because its item degrees are batch-local.
+        # n_bins > 1: degree-binned shards.  p = 1: both orientations, each
+        # R^T shard re-binned independently (its item degrees are
+        # batch-local).  p > 1 (mesh): the theta half gets batch-uniform
+        # stacked bins instead — caps chosen globally over all q batches,
+        # per-batch membership carried by the stack's ``items`` map — while
+        # the solve-X half keeps the uniform mesh layout (r_model_parts).
+        self.r_binned = None
+        self.rt_binned = None
+        self.rt_stacked = None
         if n_bins > 1:
-            self.r_binned = bin_padded(self.r, n_bins, k_multiple=k_multiple)
-            self.rt_binned = tuple(
-                bin_padded(self._rt_shard(j), n_bins, k_multiple=k_multiple)
-                for j in range(q))
-        else:
-            self.r_binned = None
-            self.rt_binned = None
+            if p == 1:
+                self.r_binned = bin_padded(self.r, n_bins,
+                                           k_multiple=k_multiple)
+                self.rt_binned = tuple(
+                    bin_padded(self._rt_shard(j), n_bins,
+                               k_multiple=k_multiple)
+                    for j in range(q))
+            else:
+                self.rt_stacked = stack_binned_parts(
+                    self.rt_parts, n_bins, k_multiple=k_multiple, p=p)
 
     def _rt_shard(self, j: int) -> PaddedELL:
         """R^T shard of user-batch ``j`` as a standalone PaddedELL view."""
@@ -187,6 +215,9 @@ class RatingStore:
         budget prices what the driver actually streams."""
         if self.rt_binned is not None:
             slots = sum(b.padded_slots for b in self.rt_binned)
+            return float(slots) / max(self.nnz, 1)
+        if self.rt_stacked is not None:
+            slots = sum(st.padded_slots for st in self.rt_stacked)
             return float(slots) / max(self.nnz, 1)
         q, n, K_loc = self.rt_parts.idx.shape
         return float(q * n * K_loc) / max(self.nnz, 1)
@@ -221,8 +252,14 @@ class RatingStore:
     def bin_fill_pairs(self) -> list:
         """Per-bin ``(padded_slots, nnz)`` of the worst-fill orientation —
         the ``plan_for(bin_fills=...)`` pricing input.  Requires a binned
-        store; their aggregate equals ``worst_fill``, so the planner prices
-        exactly the binned bytes the driver streams."""
+        store.  p = 1: their aggregate equals ``worst_fill``, so the planner
+        prices exactly the binned bytes the driver streams.  p > 1
+        (stacked): the pairs price the batch-uniform theta-half stacks —
+        the binned component of the mesh run (the uniform solve-X side is
+        priced by ``fill_r_model``)."""
+        if self.rt_stacked is not None:
+            return [(int(st.padded_slots), int(st.nnz))
+                    for st in self.rt_stacked]
         assert self.r_binned is not None, \
             "RatingStore was built with n_bins=1; pass n_bins to price bins"
         if self.fill_r >= self.fill_rt:
@@ -243,6 +280,9 @@ class RatingStore:
         if self.r_binned is not None:
             total += binned_nbytes(self.r_binned)
             total += sum(binned_nbytes(b) for b in self.rt_binned)
+        if self.rt_stacked is not None:
+            total += sum(st.nbytes + st.items.nbytes
+                         for st in self.rt_stacked)
         return total
 
     def x_slice_triplet(self, row_start: int, row_stop: int) -> Triplet:
@@ -298,6 +338,22 @@ class RatingStore:
             "RatingStore was built with n_bins=1; pass n_bins to bin shards"
         assert 0 <= j < self.q, (j, self.q)
         return self.rt_binned[j]
+
+    def theta_wave_stacked(self, batch_indices) -> list:
+        """Per-bin stacked theta-half payloads of one mesh wave: for each
+        bin, (idx ``[nbatch, rows_b, K_b]``, val, cnt ``[nbatch, rows_b]``,
+        items ``[nbatch, rows_b]``) cut to the wave's batches — host views
+        of the precomputed batch-uniform stacks (``items`` stays on host;
+        it is the scatter map for the per-bin partials, not a transfer).
+        Requires the store to have been built with ``p > 1`` and
+        ``n_bins > 1``."""
+        assert self.rt_stacked is not None, \
+            "RatingStore was built without stacked bins; pass p > 1 and " \
+            "n_bins > 1 to stream binned waves on a mesh"
+        js = np.asarray(list(batch_indices), dtype=np.int64)
+        assert js.size and js.min() >= 0 and js.max() < self.q, (js, self.q)
+        return [(st.idx[js], st.val[js], st.cnt[js], st.items[js])
+                for st in self.rt_stacked]
 
 
 class TileStore:

@@ -69,6 +69,11 @@ class BlockGrid:
     #: Factors inside the grid live in PERMUTED row order; map back with
     #: ``user_inv`` before any global-coordinate evaluation.
     user_perm: np.ndarray | None = None
+    #: autotune decision record (``repro.core.autotune`` result dict) when
+    #: the grid was built with ``per_tile_k="auto"``; the streaming SGD
+    #: driver copies it into the ledger run context.  None on hand-picked
+    #: grids.
+    tune: dict | None = None
 
     @property
     def mb(self) -> int:
@@ -150,8 +155,8 @@ def tile_k_ladder(k: int, k_multiple: int = 8) -> int:
 
 def block_coo(rows: np.ndarray, cols: np.ndarray, vals: np.ndarray,
               m: int, n: int, g: int, k_multiple: int = 8,
-              per_tile_k: bool = False,
-              degree_sort: bool = False) -> BlockGrid:
+              per_tile_k: bool | str = False,
+              degree_sort: bool = False, tune_cache=None) -> BlockGrid:
     """Partition a rating COO into a g x g BlockGrid.
 
     Block sizes are ``mb = ceil(m/g)`` users x ``nb = ceil(n/g)`` items;
@@ -168,8 +173,28 @@ def block_coo(rows: np.ndarray, cols: np.ndarray, vals: np.ndarray,
     ``per_tile_k`` gets its multi-x fill win on power-law data.  Sorting
     re-partitions the grid, so it changes the (still-exact) Hogwild visit
     order — equivalent training, not a bit-identical trajectory.
+
+    ``per_tile_k="auto"`` resolves both blocking knobs (``per_tile_k`` AND
+    ``degree_sort``, overriding the latter) through
+    ``repro.core.autotune.tune_sgd_layout`` — argmin of dispatched padded
+    slots over the blocking ladder, cached in ``tune_cache`` — and records
+    the decision on ``grid.tune`` for the streaming driver's ledger.
     """
     assert g >= 1
+    if per_tile_k == "auto":
+        from repro.core.autotune import tune_sgd_layout
+        ptr, cc, vv = csr_from_coo(rows, cols, vals, m)
+        ell = pad_csr_fast(ptr, cc, vv, n, k_multiple=k_multiple)
+        res = tune_sgd_layout(ell, g, k_multiple=k_multiple,
+                              cache=tune_cache)
+        grid = res.grid
+        if grid is None:       # cache hit carries config only — rebuild it
+            grid = block_coo(rows, cols, vals, m, n, g,
+                             k_multiple=k_multiple,
+                             per_tile_k=res.config.per_tile_k,
+                             degree_sort=res.config.degree_sort)
+        grid.tune = res.to_obj()
+        return grid
     user_perm = None
     if degree_sort:
         deg = np.bincount(rows, minlength=m)
@@ -217,11 +242,12 @@ def block_coo(rows: np.ndarray, cols: np.ndarray, vals: np.ndarray,
 
 
 def block_ell(ell: PaddedELL, g: int, k_multiple: int = 8,
-              per_tile_k: bool = False,
-              degree_sort: bool = False) -> BlockGrid:
+              per_tile_k: bool | str = False,
+              degree_sort: bool = False, tune_cache=None) -> BlockGrid:
     """Blocked view of an existing row-major PaddedELL (the ALS layout) —
-    the shard-sharing entry point the hybrid driver uses."""
+    the shard-sharing entry point the hybrid driver uses.  Accepts
+    ``per_tile_k="auto"`` like :func:`block_coo`."""
     rows, cols, vals = ell_to_coo(ell)
     return block_coo(rows, cols, vals, ell.m, ell.n_cols, g,
                      k_multiple=k_multiple, per_tile_k=per_tile_k,
-                     degree_sort=degree_sort)
+                     degree_sort=degree_sort, tune_cache=tune_cache)

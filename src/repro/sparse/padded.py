@@ -382,13 +382,24 @@ def bin_rows(ptr: np.ndarray, cols: np.ndarray, vals: np.ndarray,
 
 
 def bin_padded(ell: PaddedELL, n_bins: int,
-               k_multiple: int = 8) -> BinnedELL:
+               k_multiple: int = 8,
+               caps: "list[int] | None" = None) -> BinnedELL:
     """Re-bin an existing PaddedELL (e.g. after :func:`pad_rows`) without a
     round trip through COO: rows are grouped by ``cnt`` and each bin is
-    re-padded at its own tight K by dropping all-padding columns."""
+    re-padded at its own tight K by dropping all-padding columns.
+
+    ``caps`` overrides the ~log-spaced ladder with explicit ascending degree
+    caps — the batch-uniform binning hook: several shards binned with the
+    SAME caps produce congruent bin structures (membership may differ per
+    shard, the cap ladder never does), which is what mesh streaming stacks.
+    """
     cnt = ell.cnt.astype(np.int64)
     kmax = int(cnt.max()) if ell.m else 0
-    caps = bin_caps(kmax, n_bins, k_multiple)
+    if caps is None:
+        caps = bin_caps(kmax, n_bins, k_multiple)
+    else:
+        caps = sorted(int(c) for c in caps)
+        assert caps and caps[-1] >= kmax, (caps, kmax)
     assign = np.searchsorted(np.asarray(caps, dtype=np.int64),
                              np.maximum(cnt, 1), side="left")
     bins: list[PaddedELL] = []
@@ -408,6 +419,116 @@ def bin_padded(ell: PaddedELL, n_bins: int,
         rows.append(np.zeros(0, dtype=np.int64))
     return BinnedELL(bins=tuple(bins), rows=tuple(rows),
                      n_cols=ell.n_cols, m=ell.m)
+
+
+@dataclasses.dataclass
+class BinShardStack:
+    """One degree bin of a q-partitioned matrix, stacked batch-uniform.
+
+    Mesh streaming feeds the accumulate-Theta half one ``[n_data, rows, K]``
+    stack per wave (``distributed.su_als.make_wave_herm_fn`` shards the row
+    dim over the model axis), which requires every batch's bin to present
+    the SAME shape.  The caps are therefore chosen globally across all q
+    batches (batch-uniform item bins) while per-batch *membership* stays
+    free: batch ``j``'s members occupy the leading ``cnt[j] > 0`` rows and
+    the tail is padding rows (``cnt = 0``, exact-zero partials under the
+    weighted-lambda Hermitian with ``diag_fallback=False``).
+
+    ``items[j, u]`` is the global row (item) id stored at stacked slot
+    ``(j, u)`` — the host-side scatter coordinate for per-bin partials;
+    padding slots carry item 0 with all-zero contributions, so scattering
+    them through ``np.add.at`` is exact.  ``rows`` is always a multiple of
+    the model-axis size the stack was built for.
+    """
+
+    idx: np.ndarray    # [q, rows, K] int32, batch-local columns
+    val: np.ndarray    # [q, rows, K] float32
+    cnt: np.ndarray    # [q, rows]    int32 (0 on padding rows)
+    items: np.ndarray  # [q, rows]    int64 global row ids (0 on padding)
+    cap: int           # assignment cap of this bin (degree ladder rung)
+
+    @property
+    def q(self) -> int:
+        return self.idx.shape[0]
+
+    @property
+    def rows(self) -> int:
+        return self.idx.shape[1]
+
+    @property
+    def K(self) -> int:
+        return self.idx.shape[2]
+
+    @property
+    def nnz(self) -> int:
+        return int(self.cnt.sum())
+
+    @property
+    def padded_slots(self) -> int:
+        return int(self.q) * int(self.rows) * int(self.K)
+
+    @property
+    def nbytes(self) -> int:
+        """Streamed bytes across all q batches (idx + val + cnt — ``items``
+        is host-side scatter bookkeeping, never transferred)."""
+        return int(self.idx.nbytes + self.val.nbytes + self.cnt.nbytes)
+
+
+def stack_binned_parts(parts: PaddedELL, n_bins: int,
+                       k_multiple: int = 8, p: int = 1,
+                       caps: "list[int] | None" = None
+                       ) -> Tuple[BinShardStack, ...]:
+    """Batch-uniform degree binning of a ``partition_padded`` output.
+
+    ``parts`` carries a leading batch axis (idx ``[q, n, K_loc]``); bin caps
+    come from the GLOBAL max batch-local degree so all q batches share one
+    cap ladder, then each bin is stacked ``[q, rows_b, K_b]`` with
+    ``rows_b`` = the max per-batch member count rounded up to a multiple of
+    ``p`` (the mesh model-axis row sharding constraint) and ``K_b`` = the
+    tight rounded max member degree (never above the parent K, so the
+    column cut drops only all-padding slots — the stack holds exactly the
+    parent's nonzeros).  Bins empty in EVERY batch are dropped.
+    """
+    assert parts.idx.ndim == 3, parts.idx.shape
+    q, n, K_loc = parts.idx.shape
+    cnt = parts.cnt.astype(np.int64)                     # [q, n]
+    kmax = int(cnt.max()) if n else 0
+    if caps is None:
+        caps = bin_caps(kmax, n_bins, k_multiple)
+    else:
+        caps = sorted(int(c) for c in caps)
+        assert caps and caps[-1] >= kmax, (caps, kmax)
+    assign = np.searchsorted(np.asarray(caps, dtype=np.int64),
+                             np.maximum(cnt, 1), side="left")   # [q, n]
+    stacks: list[BinShardStack] = []
+    for b, cap in enumerate(caps):
+        members = [np.nonzero(assign[j] == b)[0].astype(np.int64)
+                   for j in range(q)]
+        max_members = max((int(mb.size) for mb in members), default=0)
+        if max_members == 0:
+            continue
+        kb = min(round_k(int(max(int(cnt[j][mb].max()) if mb.size else 0
+                                 for j, mb in enumerate(members))),
+                         k_multiple), K_loc)
+        rows_b = -(-max_members // p) * p
+        idx = np.zeros((q, rows_b, kb), dtype=np.int32)
+        val = np.zeros((q, rows_b, kb), dtype=np.float32)
+        cnt_b = np.zeros((q, rows_b), dtype=np.int32)
+        items = np.zeros((q, rows_b), dtype=np.int64)
+        for j, mb in enumerate(members):
+            idx[j, :mb.size] = parts.idx[j, mb, :kb]
+            val[j, :mb.size] = parts.val[j, mb, :kb]
+            cnt_b[j, :mb.size] = parts.cnt[j, mb]
+            items[j, :mb.size] = mb
+        stacks.append(BinShardStack(idx=idx, val=val, cnt=cnt_b,
+                                    items=items, cap=int(cap)))
+    if not stacks:       # n == 0: one all-padding stack keeps shapes legal
+        stacks.append(BinShardStack(
+            idx=np.zeros((q, p, k_multiple), np.int32),
+            val=np.zeros((q, p, k_multiple), np.float32),
+            cnt=np.zeros((q, p), np.int32),
+            items=np.zeros((q, p), np.int64), cap=k_multiple))
+    return tuple(stacks)
 
 
 def row_partition(ell: PaddedELL, q: int) -> PaddedELL:

@@ -256,6 +256,84 @@ print("mesh ALS resume OK")
 
 
 @pytest.mark.mesh
+def test_streaming_als_mesh_binned_matches_incore():
+    """PR-10 acceptance: a degree-binned store (n_bins = 4) streams on a
+    p = 2 mesh — theta half through the batch-uniform stacked bins — and
+    still matches the in-core trajectory, with a validating zero-error
+    ledger priced from the store's real bin fills."""
+    from test_distributed import run_script
+    run_script(MESH_COMMON + """
+from repro.obs.ledger import validate_ledger
+cfg = als_mod.AlsConfig(f=SPEC.f, lam=SPEC.lam, iters=3, mode="ref")
+rr, rtt = als_mod.ell_triplet(r), als_mod.ell_triplet(rt)
+state, hist = als_mod.als_train(rr, rtt, r.m, rt.m, cfg, test=rtest)
+
+store = RatingStore(r, q=4, p=2, n_bins=4)
+assert store.rt_stacked is not None and len(store.rt_stacked) >= 2
+plan = plan_for(SPEC.m, SPEC.n, r.nnz, SPEC.f, p=2, q=4, n_data=2,
+                bin_fills=store.bin_fill_pairs(), eps=0, buffers=4,
+                acc_bytes=streaming_acc_bytes(SPEC.n, SPEC.f),
+                hbm_bytes=1 << 22)
+assert plan.waves >= 2 and plan.p == 2
+sched = build_schedule(plan, SPEC.m, SPEC.n, n_data=2)
+mesh = make_mesh((2, 2), ("data", "model"))
+fac, shist, tel = run_streaming_als(store, sched, cfg, mesh=mesh,
+                                    train_eval=rr, test_eval=rtest)
+for a, b in zip(shist, hist):
+    assert abs(a["train_rmse"] - b["train_rmse"]) < 1e-4, (a, b)
+assert np.abs(fac.x[:r.m] - np.asarray(state.x)).max() < 1e-4
+assert np.abs(fac.theta - np.asarray(state.theta)).max() < 1e-4
+assert tel.peak_bytes <= tel.capacity_bytes
+assert tel.peak_bytes <= required_capacity_bytes(store, sched, SPEC.f)
+led = tel.ledger
+assert led["run"]["n_bins"] == 4 and led["run"]["p"] == 2
+assert led["run"]["autotune"] is None          # layout was pinned by hand
+summary = validate_ledger(led)
+assert summary["errors"] == 0 and summary["ok"], summary
+names = {rec["name"] for rec in led["records"]}
+assert {"bytes_streamed", "padded_slots", "nnz_streamed"} <= names
+for rec in led["records"]:
+    if rec["check"] == "exact":
+        assert rec["ok"] and rec["drift"] == 0.0, rec
+print("mesh binned ALS parity OK")
+""")
+
+
+@pytest.mark.mesh
+def test_streaming_als_mesh_binned_kill_resume_bit_exact():
+    """Binned mesh runs (p = 2, n_bins = 4) killed mid-half resume to
+    bit-identical factors — the stacked-bin theta half checkpoints its
+    per-data-shard f64 partials like the uniform path."""
+    from test_distributed import run_script
+    run_script(MESH_COMMON + """
+import tempfile
+cfg = als_mod.AlsConfig(f=SPEC.f, lam=SPEC.lam, iters=2, mode="ref")
+store = RatingStore(r, q=4, p=2, n_bins=4)
+plan = plan_for(SPEC.m, SPEC.n, r.nnz, SPEC.f, p=2, q=4, n_data=2,
+                bin_fills=store.bin_fill_pairs(), eps=0, buffers=4,
+                acc_bytes=streaming_acc_bytes(SPEC.n, SPEC.f),
+                hbm_bytes=1 << 22)
+sched = build_schedule(plan, SPEC.m, SPEC.n, n_data=2)
+mesh = make_mesh((2, 2), ("data", "model"))
+ref, _, _ = run_streaming_als(store, sched, cfg, mesh=mesh)
+for kill in (1, 3, 5):
+    with tempfile.TemporaryDirectory() as d:
+        try:
+            run_streaming_als(store, sched, cfg, mesh=mesh, ckpt_dir=d,
+                              fail_after_waves=kill)
+            raise SystemExit("simulated kill did not fire")
+        except SimulatedFailure:
+            pass
+        fac, _, tel = run_streaming_als(store, sched, cfg, mesh=mesh,
+                                        ckpt_dir=d)
+        assert tel.resumed_from_step == kill
+        assert np.array_equal(fac.x, ref.x), kill
+        assert np.array_equal(fac.theta, ref.theta), kill
+print("mesh binned ALS resume OK")
+""")
+
+
+@pytest.mark.mesh
 def test_streaming_sgd_on_mesh_matches_incore():
     """Streaming SGD with each wave's tiles sharded one-per-device over the
     joint (data, model) axes matches the in-core trajectory to 1e-4 —

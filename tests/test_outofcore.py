@@ -426,12 +426,23 @@ def test_rating_store_binned_invariants():
         store_u.x_slice_binned(0, npp)
 
 
-def test_binned_store_rejects_model_shards():
-    """Binned + p > 1 mesh sharding is an explicit ROADMAP follow-up, not a
-    silent wrong answer."""
+def test_binned_store_with_model_shards_builds_stacks():
+    """Binned + p > 1 now builds the batch-uniform stacked theta bins
+    (``rt_stacked``) instead of the p = 1 per-batch BinnedELL shards —
+    the layout the mesh herm stack can shard (one shape per bin)."""
     r, _, _, _ = _problem()
-    with pytest.raises(AssertionError, match="ROADMAP"):
-        RatingStore(r, q=4, p=2, n_bins=4)
+    store = RatingStore(r, q=4, p=2, n_bins=4)
+    assert store.r_binned is None and store.rt_binned is None
+    stacks = store.rt_stacked
+    assert stacks is not None and len(stacks) >= 2
+    # every stack is batch-uniform and p-divisible; nonzeros conserved
+    assert all(st.idx.shape[0] == 4 and st.rows % 2 == 0 for st in stacks)
+    assert sum(st.nnz for st in stacks) == r.nnz
+    # caps ascend and the fill pairs price exactly the stacked slots
+    caps = [st.cap for st in stacks]
+    assert caps == sorted(caps)
+    assert store.bin_fill_pairs() == [(st.padded_slots, st.nnz)
+                                      for st in stacks]
 
 
 @pytest.mark.slow
